@@ -1,0 +1,79 @@
+"""Run the full dry-run grid: every (arch x applicable shape x mesh) cell
+in its own subprocess (jax device-count lock + memory hygiene), writing
+JSON records to benchmarks/data/dryrun/.
+
+Usage: python benchmarks/dryrun_sweep.py [--only-single-pod] [--archs a,b]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_DIR = os.path.join(ROOT, "benchmarks", "data", "dryrun")
+
+
+def cells(archs=None):
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.configs.base import get_arch, list_archs
+    for arch in archs or list_archs():
+        cfg = get_arch(arch)
+        for shape in cfg.shapes():
+            for multi in (False, True):
+                yield arch, shape.name, multi
+
+
+def run_one(arch: str, shape: str, multi: bool, extra=(),
+            tag: str = "") -> dict:
+    name = f"{arch}__{shape}__{'pod2' if multi else 'pod1'}"
+    if tag:
+        name += f"__{tag}"
+    out = os.path.join(OUT_DIR, name + ".json")
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", out, *extra]
+    if multi:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    t0 = time.time()
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       timeout=3000)
+    if r.returncode != 0:
+        err = {"arch": arch, "shape": shape, "multi_pod": multi,
+               "error": r.stderr[-3000:], "wall_s": time.time() - t0}
+        with open(out + ".err", "w") as f:
+            json.dump(err, f, indent=1)
+        print(f"FAIL {name} ({time.time()-t0:.0f}s)", flush=True)
+        return err
+    print(f"ok   {name} ({time.time()-t0:.0f}s)", flush=True)
+    with open(out) as f:
+        return json.load(f)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = args.archs.split(",") if args.archs else None
+    n_ok = n_fail = 0
+    for arch, shape, multi in cells(archs):
+        if args.single_pod_only and multi:
+            continue
+        rec = run_one(arch, shape, multi)
+        if "error" in rec:
+            n_fail += 1
+        else:
+            n_ok += 1
+    print(f"done: {n_ok} ok, {n_fail} failed")
+
+
+if __name__ == "__main__":
+    main()

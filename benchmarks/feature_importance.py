@@ -1,0 +1,69 @@
+"""Feature-importance analysis (paper §3.2.3, Fig. 6): Varimax-rotated
+PCA loadings over the profiled corpus quantify each raw feature's
+contribution to the model's input space.
+
+    PYTHONPATH=src python benchmarks/feature_importance.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.core import dataset as ds  # noqa: E402
+from repro.core.features import RAW_FEATURE_NAMES  # noqa: E402
+from repro.core.perf_model import FeaturePipeline  # noqa: E402
+
+
+def varimax(loadings: np.ndarray, *, gamma: float = 1.0, iters: int = 100,
+            tol: float = 1e-6) -> np.ndarray:
+    """Classic Varimax rotation of a (features x components) loading
+    matrix (Kaiser 1958)."""
+    p, k = loadings.shape
+    R = np.eye(k)
+    var = 0.0
+    for _ in range(iters):
+        L = loadings @ R
+        u, s, vt = np.linalg.svd(
+            loadings.T @ (L**3 - (gamma / p) * L @ np.diag(
+                np.sum(L**2, axis=0))))
+        R = u @ vt
+        new_var = np.sum(s)
+        if new_var - var < tol:
+            break
+        var = new_var
+    return loadings @ R
+
+
+def main() -> None:
+    samples = ds.generate(None, datasets_per_program=3, reps=2,
+                          verbose=False)
+    X, y = ds.training_matrix(samples)
+    pipe = FeaturePipeline.fit(X, y, n_components=9)
+
+    # loadings of the kept raw features on the PCA components
+    names = [
+        (RAW_FEATURE_NAMES + ["cfg_log2_partitions", "cfg_log2_tasks",
+                              "cfg_log2_tasks_per_part"])[i]
+        for i in pipe.keep_idx]
+    rotated = varimax(pipe.pca_components)
+    # importance = total squared rotated loading (variance carried)
+    importance = np.sum(rotated**2, axis=1)
+    importance = importance / importance.sum()
+
+    print("feature,importance  (Varimax-rotated PCA variance share; "
+          "paper Fig. 6 analogue)")
+    order = np.argsort(-importance)
+    for i in order:
+        bar = "#" * int(round(importance[i] * 200))
+        print(f"{names[i]:26s} {importance[i]:6.3f} {bar}")
+    print(f"\npruned (|rho|>0.7): "
+          f"{sorted(set(range(X.shape[1])) - set(pipe.keep_idx.tolist()))}")
+
+
+if __name__ == "__main__":
+    main()

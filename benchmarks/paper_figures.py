@@ -1,0 +1,199 @@
+"""One benchmark per paper table/figure, all consuming the profiled
+sample cache (benchmarks/data/profile_cache.json).
+
+  fig2   — speedup heatmap over (partitions, tasks) for two programs
+  fig9   — our approach vs oracle, per program (leave-one-out CV)
+  fig10  — vs fixed configurations
+  fig12  — vs Liu et al. / Werkhoven et al. analytical models
+  fig14  — vs the classification-based approach (prior work [16])
+  table5 — alternative modeling techniques
+  search — runtime overhead of feature extraction + model ranking
+"""
+from __future__ import annotations
+
+import time
+from collections import defaultdict
+
+import numpy as np
+
+from repro.core import dataset as ds
+from repro.core.analytical import liu_config, probe_from_features, werkhoven_config
+from repro.core.classifier import KNNClassifier
+from repro.core.features import RAW_FEATURE_NAMES, config_features
+from repro.core.perf_model import (ForestRegressor, KernelRidgeRBF,
+                                   PerformanceModel, TreeRegressor)
+from repro.core.search import search_best
+from repro.core.stream_config import StreamConfig
+
+
+def _geomean(xs) -> float:
+    xs = np.asarray(list(xs), dtype=np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))
+
+
+def _nearest_cfg(sample: ds.Sample, cfg: StreamConfig) -> StreamConfig:
+    """Snap a predicted config to the nearest profiled cell (for scoring)."""
+    if cfg.as_tuple() in sample.times:
+        return cfg
+    cand = min(sample.times, key=lambda pt: (
+        abs(np.log2(pt[0]) - np.log2(cfg.partitions))
+        + abs(np.log2(pt[1]) - np.log2(cfg.tasks))))
+    return StreamConfig(*cand)
+
+
+def _achieved(sample: ds.Sample, cfg: StreamConfig) -> float:
+    return sample.speedup(_nearest_cfg(sample, cfg))
+
+
+def loo_predictions(samples, *, model_cls=PerformanceModel, epochs=600,
+                    **kw):
+    """Leave-one-out over programs: program -> [(sample, chosen_cfg)]."""
+    programs = sorted({s.program for s in samples})
+    out = {}
+    for prog in programs:
+        train, test = ds.loo_split(samples, prog)
+        X, y = ds.training_matrix(train)
+        if model_cls is PerformanceModel:
+            model = model_cls.train(X, y, epochs=epochs, **kw)
+        else:
+            model = model_cls.train(X, y, **kw)
+        picks = []
+        for s in test:
+            cfgs = [StreamConfig(p, t) for (p, t) in s.times]
+            Xq = np.stack([np.concatenate(
+                [s.features, config_features(c.partitions, c.tasks)])
+                for c in cfgs])
+            preds = model.predict(Xq)
+            picks.append((s, cfgs[int(np.argmax(preds))]))
+        out[prog] = picks
+    return out
+
+
+def fig2_heatmap(samples, programs=("binomial", "jacobi-1d")) -> list[str]:
+    rows = []
+    for prog in programs:
+        best = None
+        for s in samples:
+            if s.program == prog:
+                best = s if best is None or s.scale > best.scale else best
+        if best is None:
+            continue
+        for (p, t), sec in sorted(best.times.items()):
+            rows.append(f"fig2.{prog}@{best.scale},p={p},t={t},"
+                        f"{sec*1e6:.1f},speedup={best.t_single/sec:.3f}")
+    return rows
+
+
+def fig9_overall(samples) -> tuple[list[str], dict]:
+    preds = loo_predictions(samples)
+    rows = []
+    all_achieved, all_oracle = [], []
+    for prog, picks in sorted(preds.items()):
+        ach = [_achieved(s, c) for s, c in picks]
+        orc = [s.oracle_speedup for s, _ in picks]
+        all_achieved += ach
+        all_oracle += orc
+        rows.append(
+            f"fig9.{prog},{_geomean(ach):.3f},oracle={_geomean(orc):.3f},"
+            f"pct_of_oracle={100*_geomean(ach)/_geomean(orc):.1f}")
+    mean_ach, mean_orc = _geomean(all_achieved), _geomean(all_oracle)
+    rows.append(f"fig9.MEAN,{mean_ach:.3f},oracle={mean_orc:.3f},"
+                f"pct_of_oracle={100*mean_ach/mean_orc:.1f}")
+    summary = {"ours": mean_ach, "oracle": mean_orc,
+               "pct": 100 * mean_ach / mean_orc,
+               "per_sample": [( s.program, s.scale, _achieved(s, c),
+                               s.oracle_speedup)
+                              for picks in preds.values()
+                              for s, c in picks]}
+    return rows, summary
+
+
+def fig10_fixed(samples) -> list[str]:
+    # fixed config 1: hand-picked moderate config (paper: (4,16));
+    # fixed config 2: best-average config over the whole corpus (paper: (17,85))
+    per_cfg = defaultdict(list)
+    for s in samples:
+        for (p, t), sec in s.times.items():
+            per_cfg[(p, t)].append(s.t_single / sec)
+    common = {pt: _geomean(v) for pt, v in per_cfg.items()
+              if len(v) == len(samples)}
+    best_avg = max(common, key=common.get) if common else (2, 8)
+    fixed = {"fixed(2,8)": StreamConfig(2, 8),
+             f"fixed_bestavg{best_avg}": StreamConfig(*best_avg)}
+    rows = []
+    for name, cfg in fixed.items():
+        achieved = [_achieved(s, cfg) for s in samples]
+        rows.append(f"fig10.{name},{_geomean(achieved):.3f}")
+    return rows
+
+
+def fig12_analytical(samples) -> list[str]:
+    rows = []
+    for name, fn in (("liu", liu_config), ("werkhoven", werkhoven_config)):
+        achieved = []
+        for s in samples:
+            probe = probe_from_features(dict(zip(RAW_FEATURE_NAMES,
+                                                 s.features)))
+            achieved.append(_achieved(s, fn(probe)))
+        rows.append(f"fig12.{name},{_geomean(achieved):.3f}")
+    return rows
+
+
+def fig14_classifier(samples) -> list[str]:
+    programs = sorted({s.program for s in samples})
+    achieved = []
+    for prog in programs:
+        train, test = ds.loo_split(samples, prog)
+        X = np.stack([s.features for s in train])
+        labels = [s.best_config for s in train]
+        clf = KNNClassifier.train(X, labels, k=3)
+        for s in test:
+            achieved.append(_achieved(s, clf.predict(s.features)))
+    return [f"fig14.knn_classifier,{_geomean(achieved):.3f}"]
+
+
+def table5_models(samples) -> list[str]:
+    X, y = ds.training_matrix(samples)
+    rows = []
+    entries = [
+        ("MLP_regression_ours", PerformanceModel, {"epochs": 600}),
+        ("DCT_regression", TreeRegressor, {}),
+        ("RF_regression", ForestRegressor, {}),
+        ("SVR_analogue_KRR_rbf", KernelRidgeRBF, {}),
+    ]
+    for name, cls, kw in entries:
+        t0 = time.perf_counter()
+        preds = loo_predictions(samples, model_cls=cls,
+                                **({"epochs": 300} if cls is PerformanceModel
+                                   else {}))
+        train_time = time.perf_counter() - t0
+        ach = [_achieved(s, c) for picks in preds.values()
+               for s, c in picks]
+        # prediction latency for one full candidate ranking
+        model = (cls.train(X, y, **kw) if cls is not PerformanceModel
+                 else cls.train(X, y, epochs=200))
+        s0 = samples[0]
+        from repro.core.features import config_features
+        cfgs = [StreamConfig(p, t) for p, t in s0.times]
+        Xq = np.stack([np.concatenate(
+            [s0.features, config_features(c.partitions, c.tasks)])
+            for c in cfgs])
+        t0 = time.perf_counter()
+        model.predict(Xq)
+        pred_ms = (time.perf_counter() - t0) * 1e3
+        rows.append(f"table5.{name},{pred_ms*1e3:.0f},"
+                    f"speedup={_geomean(ach):.3f},"
+                    f"loo_train_s={train_time:.1f}")
+    return rows
+
+
+def search_overhead(samples) -> list[str]:
+    X, y = ds.training_matrix(samples)
+    model = PerformanceModel.train(X, y, epochs=300)
+    s = samples[0]
+    cfgs = [StreamConfig(p, t) for p, t in s.times]
+    t0 = time.perf_counter()
+    best, preds, dt = search_best(model, s.features, cfgs)
+    total = time.perf_counter() - t0
+    return [f"search.rank_{len(cfgs)}_configs,{total*1e6:.0f},"
+            f"model_only_us={dt*1e6:.0f}"]

@@ -1,0 +1,67 @@
+"""Assemble the EXPERIMENTS.md roofline table from the dry-run records.
+
+    python benchmarks/roofline_table.py [--pod pod1|pod2|both] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def load(pattern="*"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(
+            ROOT, "benchmarks", "data", "dryrun", pattern + ".json"))):
+        with open(path) as f:
+            d = json.load(f)
+        d["_file"] = os.path.basename(path)
+        recs.append(d)
+    return recs
+
+
+def fmt_row(d, md=False):
+    r = d["roofline"]
+    mesh = "2x16x16" if "pod" in d["mesh"] else "16x16"
+    mem = d.get("memory_analysis", {})
+    arg_gb = mem.get("argument_size_in_bytes", 0) / 2**30
+    tmp_gb = mem.get("temp_size_in_bytes", 0) / 2**30
+    cells = [
+        d["arch"], d["shape"], mesh, d.get("options", ""),
+        f"{r['compute_s']*1e3:9.2f}", f"{r['memory_s']*1e3:9.2f}",
+        f"{r['collective_s']*1e3:9.2f}", r["dominant"][:4],
+        f"{r['model_flops']:.2e}", f"{r['useful_flops_fraction']:.2f}",
+        f"{r['roofline_fraction']:.4f}",
+        f"{arg_gb:6.1f}", f"{tmp_gb:7.1f}",
+    ]
+    sep = " | " if md else ","
+    return sep.join(str(c) for c in cells)
+
+
+HEADER = ["arch", "shape", "mesh", "opts", "compute_ms", "memory_ms",
+          "collective_ms", "dom", "model_flops", "useful_frac",
+          "roofline_frac", "args_GB/dev", "temp_GB/dev"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--pattern", default="*")
+    args = ap.parse_args()
+    recs = load(args.pattern)
+    sep = " | " if args.md else ","
+    print(sep.join(HEADER))
+    if args.md:
+        print(" | ".join("---" for _ in HEADER))
+    for d in recs:
+        if "roofline" in d:
+            print(fmt_row(d, args.md))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Consumes the profiled
+sample cache (generated on first run; a cached run takes ~2-4 min, a cold
+run also profiles the 39-program suite).
+
+    PYTHONPATH=src python -m benchmarks.run [--programs a,b] [--datasets N]
+    PYTHONPATH=src python -m benchmarks.run --quick    # tiny subset
+
+A dry-run roofline summary (from benchmarks/data/dryrun/*.json, produced
+by benchmarks/dryrun_sweep.py) is appended when available.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.core import dataset as ds  # noqa: E402
+
+from benchmarks import paper_figures as pf  # noqa: E402
+
+QUICK_PROGRAMS = ["vecadd", "binomial", "sgemm", "jacobi-1d", "mri-q",
+                  "blackscholes", "dotprod", "fwt"]
+
+
+def dryrun_summary() -> list[str]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(
+            ROOT, "benchmarks", "data", "dryrun", "*.json"))):
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except Exception:
+            continue
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        rows.append(
+            f"dryrun.{d['arch']}.{d['shape']}."
+            f"{'pod2' if 'pod' in d['mesh'] else 'pod1'},"
+            f"{r['bound_s']*1e6:.0f},"
+            f"dominant={r['dominant']},frac={r['roofline_fraction']:.4f}"
+            if "bound_s" in r else
+            f"dryrun.{d['arch']}.{d['shape']},"
+            f"{max(r['compute_s'], r['memory_s'], r['collective_s'])*1e6:.0f},"
+            f"dominant={r['dominant']},frac={r['roofline_fraction']:.4f}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--programs", default=None)
+    ap.add_argument("--datasets", type=int, default=3)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reps", type=int, default=2)
+    args = ap.parse_args()
+
+    if args.programs:
+        programs = args.programs.split(",")
+    elif args.quick:
+        programs = QUICK_PROGRAMS
+    else:
+        programs = None  # all 39
+
+    samples = ds.generate(programs, datasets_per_program=args.datasets,
+                          reps=args.reps, verbose=True)
+    print(f"# {len(samples)} profiled samples over "
+          f"{len({s.program for s in samples})} programs")
+    print("name,us_per_call,derived")
+
+    for row in pf.fig2_heatmap(samples):
+        print(row)
+    fig9_rows, summary = pf.fig9_overall(samples)
+    for row in fig9_rows:
+        print(row)
+    for row in pf.fig10_fixed(samples):
+        print(row)
+    for row in pf.fig12_analytical(samples):
+        print(row)
+    for row in pf.fig14_classifier(samples):
+        print(row)
+    for row in pf.table5_models(samples):
+        print(row)
+    for row in pf.search_overhead(samples):
+        print(row)
+    for row in dryrun_summary():
+        print(row)
+    print(f"# SUMMARY ours={summary['ours']:.3f}x "
+          f"oracle={summary['oracle']:.3f}x "
+          f"pct_of_oracle={summary['pct']:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

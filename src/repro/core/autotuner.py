@@ -1,0 +1,84 @@
+"""End-to-end runtime autotuner (paper Fig. 4): features -> model ->
+ranked configs -> StreamConfig, in milliseconds, per program x dataset.
+
+Also hosts the pod-scale face of the technique: ``rank_mesh_candidates``
+scores (mesh factorization x microbatch) candidates for a training step
+from dry-run roofline features — the TPU-native generalization where
+"profiling" is exact static analysis (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import features as feat_lib
+from repro.core.perf_model import PerformanceModel
+from repro.core.search import search_best
+from repro.core.stream_config import StreamConfig, default_space
+from repro.core.streams import StreamedRunner
+from repro.core.workloads import Workload
+
+
+@dataclasses.dataclass
+class TuneResult:
+    config: StreamConfig
+    predicted_speedup: float
+    feature_seconds: float
+    search_seconds: float
+
+
+class AutoTuner:
+    def __init__(self, model: PerformanceModel,
+                 candidates: Optional[Sequence[StreamConfig]] = None):
+        self.model = model
+        self.candidates = list(candidates or default_space())
+
+    def tune(self, wl: Workload, chunked: dict, shared: dict,
+             *, runner: Optional[StreamedRunner] = None) -> TuneResult:
+        t0 = time.perf_counter()
+        runner = runner or StreamedRunner(wl, chunked, shared)
+        feats = feat_lib.extract_features(runner, profile_reps=1)
+        t_feat = time.perf_counter() - t0
+        n_rows = next(iter(chunked.values())).shape[0]
+        cands = [c for c in self.candidates
+                 if c.partitions * c.tasks <= n_rows]
+        best, preds, t_search = search_best(self.model, feats.values, cands)
+        return TuneResult(best, float(np.max(preds)), t_feat, t_search)
+
+
+# ---------------------------------------------------------------------------
+# Pod-scale candidate ranking (mesh backend)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCandidate:
+    """A pod-scale 'stream configuration': how the fixed chip grid is
+    factorized (spatial) and how many microbatches per step (temporal)."""
+
+    data: int
+    model: int
+    microbatches: int
+
+    @property
+    def stream_config(self) -> StreamConfig:
+        return StreamConfig(self.data, self.microbatches)
+
+
+def rank_by_roofline(candidates, terms: dict) -> list:
+    """Rank MeshCandidates by their dry-run roofline makespan estimate.
+
+    ``terms`` maps candidate -> dict(compute=, memory=, collective=) in
+    seconds (from repro.roofline.analysis).  The makespan model assumes the
+    collective term overlaps compute up to the dominant-term bound — the
+    same overlap objective the paper's model learns.
+    """
+    def makespan(c):
+        t = terms[c]
+        return max(t["compute"], t["memory"]) + max(
+            0.0, t["collective"] - 0.5 * max(t["compute"], t["memory"]))
+
+    return sorted(candidates, key=makespan)

@@ -1,0 +1,96 @@
+"""Synthetic sharded data pipeline with double-buffered host prefetch.
+
+The host->device feed is the pod-scale face of the paper's host-device
+transfer stage: batches are staged on host threads and ``device_put`` with
+the global batch sharding one step ahead of consumption, so the H2D copy of
+step i+1 overlaps compute of step i (temporal sharing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    frontend_dim: int = 0  # >0 => also emit stub frontend embeddings
+
+
+class SyntheticLM:
+    """Deterministic synthetic token stream (seeded; reproducible across
+    restarts — a restart at step k regenerates the identical batch k)."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int) -> dict:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        tokens = rng.integers(
+            0, cfg.vocab_size, (cfg.global_batch, cfg.seq_len + 1),
+            dtype=np.int32)
+        out = {"tokens": tokens[:, :-1], "labels": tokens[:, 1:]}
+        if cfg.frontend_dim:
+            out["embeds"] = rng.standard_normal(
+                (cfg.global_batch, cfg.seq_len, cfg.frontend_dim)
+            ).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class PrefetchFeeder:
+    """Stages batches onto device(s) ``depth`` steps ahead on a host thread."""
+
+    def __init__(self, source: SyntheticLM, sharding=None, *,
+                 depth: int = 2, start_step: int = 0):
+        self.source = source
+        self.sharding = sharding
+        self.depth = depth
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        step = self._step
+        while not self._stop.is_set():
+            host = self.source.batch_at(step)
+            if self.sharding is not None:
+                dev = jax.device_put(host, self.sharding)
+            else:
+                dev = jax.device_put(host)
+            try:
+                self._q.put((step, dev), timeout=1.0)
+            except queue.Full:
+                if self._stop.is_set():
+                    return
+                continue
+            step += 1
+
+    def next(self):
+        step, batch = self._q.get()
+        return step, batch
+
+    def stop(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-sweep targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import reference_attention
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """Naive attention oracle (B,Sq,H,hd) x (B,Sk,KV,hd) -> (B,Sq,H,hd)."""
+    return reference_attention(q, k, v, causal=causal)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(
+        x.dtype)

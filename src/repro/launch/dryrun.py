@@ -1,0 +1,316 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract memory / cost / collective-roofline evidence.
+
+MUST set XLA_FLAGS before any other import (jax locks the device count on
+first init).  Only this entry point forces 512 host devices — smoke tests
+and benches see the real single CPU device.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, InputShape, get_arch, list_archs
+from repro.core.stream_config import StreamConfig
+from repro.core.streams import streamify_train_step
+from repro.launch.mesh import dp_axes_of, make_production_mesh
+from repro.models import transformer
+from repro.models.model_zoo import Model
+from repro.models.transformer import RunConfig
+from repro.optim import optimizer as opt_lib
+from repro.parallel.sharding_rules import AxisRules, tree_specs
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                     RooflineTerms, collective_bytes)
+from repro.roofline.jaxpr_cost import step_cost
+
+
+@dataclasses.dataclass
+class DryRunOptions:
+    multi_pod: bool = False
+    remat: str = "dots"
+    fsdp: bool = True
+    fsdp_over_pod: bool = False
+    microbatches: int = 1
+    opt_dtype: str = "f32"           # f32 | bf16
+    capacity_factor: float = 1.25
+    q_block: int = 1024
+    kv_block: int = 1024
+    moe_group: int = 512
+    scan_layers: bool = True
+    donate: bool = True
+    dp_over_model: bool = False  # no TP: 'model' axis as extra DP (§Perf)
+
+    def tag(self) -> str:
+        bits = []
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v != f.default:
+                bits.append(f"{f.name}={v}")
+        return ",".join(bits) or "baseline"
+
+
+def build_rules(cfg: ArchConfig, shape: InputShape, mesh,
+                opts: DryRunOptions) -> AxisRules:
+    model_size = mesh.shape["model"]
+    dp_size = 1
+    for a in dp_axes_of(mesh):
+        dp_size *= mesh.shape[a]
+    rules = AxisRules.pod(
+        multi_pod=opts.multi_pod,
+        fsdp=opts.fsdp,
+        fsdp_over_pod=opts.fsdp_over_pod,
+        shard_heads=(cfg.num_heads % model_size == 0),
+        shard_kv_heads=(cfg.num_kv_heads % model_size == 0),
+        tp=not opts.dp_over_model,
+    )
+    if opts.dp_over_model:
+        dp_size *= model_size
+    if shape.global_batch % dp_size:
+        # long_500k (B=1): batch replicated, sequence still model-sharded.
+        r = dict(rules.rules)
+        r["batch"] = None
+        r["cache_batch"] = None
+        rules = AxisRules(rules=r)
+    return rules
+
+
+def build_cell(arch: str, shape_name: str, mesh, opts: DryRunOptions):
+    """Returns (jitted_fn, example_args as ShapeDtypeStructs)."""
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape not in cfg.shapes():
+        raise SystemExit(
+            f"SKIP {arch} x {shape_name}: full-attention arch, 500k dense "
+            f"KV cache is a non-goal (DESIGN.md §Arch-applicability)")
+    rules = build_rules(cfg, shape, mesh, opts)
+    dp = dp_axes_of(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if shape.global_batch % dp_size:
+        dp = ()  # batch replicated (long_500k B=1)
+    rcfg = RunConfig(
+        param_dtype=jnp.bfloat16,
+        compute_dtype=jnp.bfloat16,
+        cache_dtype=jnp.bfloat16,
+        rules=rules,
+        q_block=opts.q_block,
+        kv_block=opts.kv_block,
+        remat=opts.remat if shape.kind == "train" else "none",
+        capacity_factor=opts.capacity_factor,
+        decode_attn="sharded",
+        mesh=mesh,
+        dp_axes=dp,
+        scan_layers=opts.scan_layers,
+        moe_group_size=opts.moe_group,
+        attn_expand_kv=True,
+    )
+    model = Model(cfg, rcfg)
+
+    param_sds, param_axes = model.abstract_params()
+    pspec = tree_specs(param_axes, rules)
+    psharding = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+
+    batch_sds = model.input_specs(shape)
+    bspec = {}
+    for k, v in batch_sds.items():
+        bspec[k] = NamedSharding(mesh, rules.spec(
+            ("batch",) + ("seq",) * 0 + (None,) * (len(v.shape) - 1)))
+
+    if shape.kind == "train":
+        ocfg = opt_lib.AdamWConfig(
+            state_dtype=jnp.bfloat16 if opts.opt_dtype == "bf16"
+            else jnp.float32)
+        opt_sds = jax.eval_shape(
+            lambda p: opt_lib.init_state(p, ocfg), param_sds)
+        opt_axes = opt_lib.state_logical_axes(param_axes, ocfg)
+        ospec = {
+            "step": NamedSharding(mesh, P()),
+            "m": jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              tree_specs(opt_axes["m"], rules)),
+            "v": jax.tree.map(lambda s: NamedSharding(mesh, s),
+                              tree_specs(opt_axes["v"], rules)),
+        }
+
+        grad_fn = streamify_train_step(
+            lambda p, b: model.loss(p, b),
+            StreamConfig(1, opts.microbatches))
+
+        def train_step(params, opt_state, batch):
+            loss, metrics, grads = grad_fn(params, batch)
+            params, opt_state, om = opt_lib.apply_updates(
+                params, grads, opt_state, ocfg)
+            return params, opt_state, loss
+
+        fn = jax.jit(
+            train_step,
+            in_shardings=(psharding, ospec, bspec),
+            out_shardings=(psharding, ospec, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1) if opts.donate else (),
+        )
+        args = (param_sds, opt_sds, batch_sds)
+
+    elif shape.kind == "prefill":
+        fn = jax.jit(
+            model.forward_logits,
+            in_shardings=(psharding, bspec),
+        )
+        args = (param_sds, batch_sds)
+
+    else:  # decode
+        cache_sds = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cache_axes = model.cache_axes()
+        cspec = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             tree_specs(cache_axes, rules))
+        t_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def serve_step(params, batch, cache, t):
+            return model.decode_step(params, batch, cache, t)
+
+        fn = jax.jit(
+            serve_step,
+            in_shardings=(psharding, bspec, cspec, NamedSharding(mesh, P())),
+            donate_argnums=(2,) if opts.donate else (),
+        )
+        args = (param_sds, batch_sds, cache_sds, t_sds)
+
+    return fn, args, cfg, shape
+
+
+def _mem_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _sharded_bytes(sds_tree, sharding_tree, mesh) -> int:
+    """Estimated per-device bytes of a sharded pytree (mesh-independent
+    fallback when the backend's memory_analysis is unavailable)."""
+    total = 0
+    for sds, sh in zip(jax.tree.leaves(sds_tree), jax.tree.leaves(sharding_tree)):
+        shard_shape = sh.shard_shape(sds.shape)
+        total += int(np.prod(shard_shape)) * sds.dtype.itemsize
+    return total
+
+
+def run_cell(arch: str, shape_name: str, opts: DryRunOptions,
+             *, verbose: bool = True) -> dict:
+    mesh = make_production_mesh(multi_pod=opts.multi_pod)
+    record: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape)
+                + f" ({','.join(mesh.axis_names)})",
+        "n_chips": int(mesh.size),
+        "options": opts.tag(),
+    }
+    with mesh:
+        fn, args, cfg, shape = build_cell(arch, shape_name, mesh, opts)
+        t0 = time.time()
+        lowered = fn.lower(*args)
+        record["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t0, 2)
+
+        mem = _mem_dict(compiled)
+        record["memory_analysis"] = mem
+        hlo = compiled.as_text()
+        record["hlo_bytes"] = len(hlo)
+        # collective term: loop-aware parse of the post-SPMD per-chip module
+        coll = collective_bytes(hlo)
+        record["collective_bytes"] = {
+            k: int(v) for k, v in coll.items() if k != "counts"}
+        record["collective_counts"] = coll["counts"]
+        # compute/memory terms: jaxpr walker (exact scan trip counts),
+        # global logical cost / n_chips
+        t0 = time.time()
+        jc = step_cost(fn, *args)
+        record["jaxpr_cost_s"] = round(time.time() - t0, 2)
+        flops_chip = jc.flops / mesh.size
+        bytes_chip = jc.bytes_fused / mesh.size
+        terms = RooflineTerms(
+            compute_s=flops_chip / PEAK_FLOPS,
+            memory_s=bytes_chip / HBM_BW,
+            collective_s=coll["total"] / ICI_BW,
+            flops_per_chip=flops_chip,
+            bytes_per_chip=bytes_chip,
+            coll_bytes_per_chip=float(coll["total"]),
+            model_flops=cfg.model_flops(shape),
+            n_chips=mesh.size,
+        )
+        record["roofline"] = terms.as_dict()
+        record["roofline"]["bytes_raw_per_chip"] = jc.bytes / mesh.size
+        record["roofline"]["memory_raw_s"] = jc.bytes / mesh.size / HBM_BW
+        # XLA's own (loop-body-once) numbers kept for reference
+        cost = compiled.cost_analysis() or {}
+        record["xla_cost_analysis"] = {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals")}
+    if verbose:
+        print(json.dumps(record, indent=1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--remat", default="dots", choices=["none", "dots", "full"])
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fsdp-over-pod", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--opt-dtype", default="f32", choices=["f32", "bf16"])
+    ap.add_argument("--capacity-factor", type=float, default=1.25)
+    ap.add_argument("--q-block", type=int, default=1024)
+    ap.add_argument("--kv-block", type=int, default=1024)
+    ap.add_argument("--moe-group", type=int, default=512)
+    ap.add_argument("--no-scan", action="store_true")
+    ap.add_argument("--no-donate", action="store_true")
+    ap.add_argument("--dp-over-model", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    opts = DryRunOptions(
+        multi_pod=args.multi_pod, remat=args.remat, fsdp=not args.no_fsdp,
+        fsdp_over_pod=args.fsdp_over_pod, microbatches=args.microbatches,
+        opt_dtype=args.opt_dtype, capacity_factor=args.capacity_factor,
+        q_block=args.q_block, kv_block=args.kv_block,
+        moe_group=args.moe_group, scan_layers=not args.no_scan,
+        donate=not args.no_donate, dp_over_model=args.dp_over_model)
+
+    record = run_cell(args.arch, args.shape, opts)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(record, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

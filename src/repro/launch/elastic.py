@@ -1,0 +1,78 @@
+"""Elastic scaling: remesh a running job when the healthy device count
+changes (node failure / capacity add).
+
+The checkpoint format is mesh-independent (host numpy trees), so elastic
+restore = rebuild mesh from the surviving devices -> rebuild shardings from
+the same logical axis rules -> device_put the restored tree.  This module
+provides the remesh planning + a simulated-failure harness used by tests
+(CPU: device counts simulated via sub-meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro.parallel.sharding_rules import AxisRules, tree_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+
+    @property
+    def size(self) -> int:
+        return self.data * self.model
+
+
+def plan_remesh(n_devices: int, *, prefer_model: int) -> MeshPlan:
+    """Choose a (data, model) factorization for the surviving devices:
+    keep the model axis as close to `prefer_model` as divisibility allows
+    (TP degree is constrained by weight shapes), put the rest on data."""
+    model = min(prefer_model, n_devices)
+    while n_devices % model:
+        model -= 1
+    return MeshPlan(data=n_devices // model, model=model)
+
+
+def build_mesh(plan: MeshPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    assert len(devices) >= plan.size, (len(devices), plan.size)
+    arr = np.array(devices[: plan.size]).reshape(plan.data, plan.model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def reshard_tree(host_tree, axes_tree, mesh, rules: Optional[AxisRules] = None):
+    """device_put a host (numpy) pytree with shardings from logical axes.
+
+    Elastic meshes can have odd axis sizes (e.g. 6 devices -> model=3);
+    dims that no longer divide gracefully degrade to replication."""
+    rules = rules or AxisRules.pod()
+    specs = tree_specs(axes_tree, rules)
+
+    def put(arr, spec):
+        fitted = []
+        for dim, ax in zip(arr.shape, tuple(spec) + (None,) * arr.ndim):
+            size = 1
+            for a in (ax if isinstance(ax, tuple) else (ax,) if ax else ()):
+                size *= mesh.shape[a]
+            fitted.append(ax if dim % size == 0 else None)
+        return jax.device_put(
+            arr, NamedSharding(mesh, type(spec)(*fitted)))
+
+    return jax.tree.map(put, host_tree, specs)
+
+
+def simulate_failure_and_remesh(host_tree, axes_tree, *, old_mesh,
+                                lost_devices: int, prefer_model: int):
+    """Test harness: drop `lost_devices`, replan, reshard. Returns
+    (new_mesh, resharded_tree)."""
+    survivors = [d for d in old_mesh.devices.flatten()][
+        : old_mesh.size - lost_devices]
+    plan = plan_remesh(len(survivors), prefer_model=prefer_model)
+    new_mesh = build_mesh(plan, survivors)
+    return new_mesh, reshard_tree(host_tree, axes_tree, new_mesh)

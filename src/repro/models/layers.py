@@ -1,0 +1,160 @@
+"""Core layers and the Leaf param system.
+
+Parameters are created as ``Leaf(value, axes)`` where ``axes`` is a tuple of
+*logical* axis names consumed by ``repro.parallel.sharding_rules.AxisRules``.
+``split(tree)`` separates values from axes so the values tree can be passed
+through jit/grad while the axes tree builds PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding_rules import AxisRules
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Leaf:
+    value: jax.Array
+    axes: tuple
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+
+def is_leaf(x) -> bool:
+    return isinstance(x, Leaf)
+
+
+def values(tree):
+    return jax.tree.map(lambda l: l.value, tree, is_leaf=is_leaf)
+
+
+def axes(tree):
+    return jax.tree.map(lambda l: l.axes, tree, is_leaf=is_leaf)
+
+
+def param_count(tree) -> int:
+    return sum(
+        int(l.value.size) for l in jax.tree.leaves(tree, is_leaf=is_leaf)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, logical_axes, dtype=jnp.float32, *, fan_in=None) -> Leaf:
+    """Truncated-normal scaled by 1/sqrt(fan_in) (first axis by default)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / jnp.sqrt(jnp.maximum(fan, 1)).astype(jnp.float32)
+    v = jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std
+    return Leaf(v.astype(dtype), tuple(logical_axes))
+
+
+def embed_init(key, shape, logical_axes, dtype=jnp.float32) -> Leaf:
+    v = jax.random.normal(key, shape, jnp.float32)
+    return Leaf(v.astype(dtype), tuple(logical_axes))
+
+
+def zeros_init(shape, logical_axes, dtype=jnp.float32) -> Leaf:
+    return Leaf(jnp.zeros(shape, dtype), tuple(logical_axes))
+
+
+def ones_init(shape, logical_axes, dtype=jnp.float32) -> Leaf:
+    return Leaf(jnp.ones(shape, dtype), tuple(logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": ones_init((d,), ("embed",), dtype)}
+
+
+def rmsnorm_apply(params: dict, x: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU or classic GELU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, d_model: int, d_ff: int, *, gated: bool, dtype=jnp.float32,
+             ff_axis: str = "ff") -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), ("embed", ff_axis), dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), (ff_axis, "embed"), dtype),
+    }
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), ("embed", ff_axis), dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: jax.Array, rules: AxisRules) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, params["w_in"])
+    h = rules.constrain(h, *(("batch",) + ("seq",) * (x.ndim - 2) + ("ff",)))
+    if "w_gate" in params:
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("...f,fd->...d", h, params["w_out"])
+    return rules.constrain(
+        out, *(("batch",) + ("seq",) * (x.ndim - 2) + ("embed_act",))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32) -> dict:
+    return {"table": embed_init(key, (vocab, d_model), ("vocab", "embed"), dtype)}
+
+
+def embedding_lookup(params: dict, tokens: jax.Array, rules: AxisRules) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    return rules.constrain(out, "batch", "seq", "embed_act")
+
+
+def lm_head_apply(table: jax.Array, x: jax.Array, rules: AxisRules) -> jax.Array:
+    """Project hidden states to vocab logits (weights (vocab, d_model))."""
+    logits = jnp.einsum("...d,vd->...v", x, table)
+    return rules.constrain(logits, *(("batch",) + ("seq",) * (x.ndim - 2) + ("vocab",)))
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy. logits (B,S,V) f32-upcast, labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,138 @@
+"""Mamba selective-SSM block (arXiv:2312.00752) in pure JAX.
+
+Train/prefill run the selective scan with ``jax.lax.scan`` over time;
+decode is a single recurrence step carrying (conv_state, ssm_state).
+The inner expanded dim E = expand*d_model is tensor-parallel ('inner').
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import layers
+from repro.parallel.sharding_rules import AxisRules
+
+
+def _dt_rank(d_model: int, cfg: SSMConfig) -> int:
+    return cfg.dt_rank or -(-d_model // 16)
+
+
+def mamba_init(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32) -> dict:
+    E = cfg.expand * d_model
+    N = cfg.state_dim
+    R = _dt_rank(d_model, cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A.
+    a = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (E, 1))
+    return {
+        "in_proj": layers.dense_init(ks[0], (d_model, 2 * E), ("embed", "inner"), dtype),
+        "conv_w": layers.dense_init(ks[1], (cfg.conv_width, E), ("conv", "inner"), dtype,
+                                    fan_in=cfg.conv_width),
+        "conv_b": layers.zeros_init((E,), ("inner",), dtype),
+        "x_proj": layers.dense_init(ks[2], (E, R + 2 * N), ("inner", None), dtype),
+        "dt_proj": layers.dense_init(ks[3], (R, E), (None, "inner"), dtype),
+        "dt_bias": layers.zeros_init((E,), ("inner",), dtype),
+        "A_log": layers.Leaf(jnp.log(a).astype(jnp.float32), ("inner", "ssm_state")),
+        "D": layers.ones_init((E,), ("inner",), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], (E, d_model), ("inner", "embed"), dtype,
+                                      fan_in=E),
+    }
+
+
+def _conv_causal(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,E), w (W,E) -> (B,S,E)."""
+    W = w.shape[0]
+    lhs = jnp.moveaxis(x, 1, 2)  # (B,E,S)
+    rhs = jnp.moveaxis(w, 1, 0)[:, None, :]  # (E,1,W)
+    out = jax.lax.conv_general_dilated(
+        lhs.astype(jnp.float32), rhs.astype(jnp.float32),
+        window_strides=(1,), padding=[(W - 1, 0)],
+        feature_group_count=x.shape[-1],
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    )
+    return (jnp.moveaxis(out, 2, 1) + b).astype(x.dtype)
+
+
+def _ssm_params(params, xc, d_model, cfg):
+    """xc (..., E) -> dt (..., E), Bp (..., N), Cp (..., N)."""
+    N = cfg.state_dim
+    R = _dt_rank(d_model, cfg)
+    dbc = jnp.einsum("...e,er->...r", xc, params["x_proj"])
+    dt_x, Bp, Cp = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("...r,re->...e", dt_x, params["dt_proj"]) + params["dt_bias"])
+    return dt.astype(jnp.float32), Bp.astype(jnp.float32), Cp.astype(jnp.float32)
+
+
+def mamba_apply(params: dict, x: jax.Array, cfg: SSMConfig, rules: AxisRules,
+                *, ssm_state=None, conv_state=None, return_state: bool = False):
+    """x (B,S,D). With states given (decode), S must be 1.
+
+    Returns y (B,S,D) and, if return_state, (ssm_state, conv_state).
+    """
+    B, S, D = x.shape
+    E = cfg.expand * D
+    N = cfg.state_dim
+    W = cfg.conv_width
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xz = rules.constrain(xz, "batch", "seq", "inner")
+    x1, z = jnp.split(xz, 2, axis=-1)
+
+    A = -jnp.exp(params["A_log"])  # (E,N)
+
+    if ssm_state is None:
+        # --- full-sequence path -------------------------------------------
+        xc = jax.nn.silu(_conv_causal(x1, params["conv_w"], params["conv_b"]))
+        dt, Bp, Cp = _ssm_params(params, xc, D, cfg)  # (B,S,E),(B,S,N),(B,S,N)
+        xcf = xc.astype(jnp.float32)
+
+        def step(h, inp):
+            dt_t, B_t, C_t, x_t = inp  # (B,E),(B,N),(B,N),(B,E)
+            dA = jnp.exp(dt_t[..., None] * A)                     # (B,E,N)
+            dBx = dt_t[..., None] * B_t[:, None, :] * x_t[..., None]
+            h = h * dA + dBx
+            y = jnp.einsum("ben,bn->be", h, C_t)
+            return h, y
+
+        h0 = jnp.zeros((B, E, N), jnp.float32)
+        xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bp, 1, 0),
+              jnp.moveaxis(Cp, 1, 0), jnp.moveaxis(xcf, 1, 0))
+        h_last, ys = jax.lax.scan(step, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1) + params["D"] * xcf            # (B,S,E)
+        new_conv = None
+        if return_state:
+            # last W-1 pre-conv inputs
+            pad = jnp.zeros((B, max(W - 1 - S, 0), E), x1.dtype)
+            new_conv = jnp.concatenate([pad, x1[:, -(W - 1):]], axis=1)
+        new_ssm = h_last
+    else:
+        # --- single-step decode -------------------------------------------
+        assert S == 1
+        window = jnp.concatenate([conv_state, x1], axis=1)        # (B,W,E)
+        xc = jnp.einsum("bwe,we->be", window.astype(jnp.float32),
+                        params["conv_w"].astype(jnp.float32)) + params["conv_b"]
+        xc = jax.nn.silu(xc)                                      # (B,E)
+        dt, Bp, Cp = _ssm_params(params, xc, D, cfg)
+        dA = jnp.exp(dt[..., None] * A)
+        dBx = dt[..., None] * Bp[:, None, :] * xc.astype(jnp.float32)[..., None]
+        new_ssm = ssm_state * dA + dBx
+        y = jnp.einsum("ben,bn->be", new_ssm, Cp) + params["D"] * xc
+        y = y[:, None, :]                                         # (B,1,E)
+        new_conv = window[:, 1:]
+
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    out = rules.constrain(out, "batch", "seq", "embed_act")
+    if return_state:
+        return out, new_ssm, new_conv
+    return out
+
+
+def mamba_state_shapes(batch: int, d_model: int, cfg: SSMConfig):
+    E = cfg.expand * d_model
+    return {
+        "ssm": (batch, E, cfg.state_dim),
+        "conv": (batch, cfg.conv_width - 1, E),
+    }

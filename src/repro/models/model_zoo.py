@@ -1,0 +1,103 @@
+"""Model facade: arch name -> params / loss / prefill / decode + input specs.
+
+``Model`` wraps the composable decoder (repro.models.transformer) behind the
+four entry points the launcher lowers:
+    loss(params, batch)             -- train_4k
+    forward_logits(params, batch)   -- prefill_32k
+    decode_step(params, batch, cache, t) -- decode_32k / long_500k
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape, get_arch
+from repro.models import layers, transformer
+from repro.models.transformer import RunConfig
+from repro.parallel.sharding_rules import AxisRules
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, rcfg: Optional[RunConfig] = None):
+        self.cfg = cfg
+        self.rcfg = rcfg or RunConfig()
+
+    # -- params --------------------------------------------------------------
+
+    def init(self, key):
+        """Returns (param_values, param_logical_axes)."""
+        leafs = transformer.init_params(key, self.cfg, self.rcfg)
+        return layers.values(leafs), layers.axes(leafs)
+
+    def abstract_params(self, key=None):
+        """ShapeDtypeStruct params tree + logical axes (no allocation)."""
+        key = key if key is not None else jax.random.key(0)
+        shapes = jax.eval_shape(lambda k: self.init(k)[0], key)
+        leafs = jax.eval_shape(
+            lambda k: transformer.init_params(k, self.cfg, self.rcfg), key)
+        # axes metadata survives eval_shape via the Leaf pytree aux data
+        axes = jax.tree.map(
+            lambda l: l.axes, leafs,
+            is_leaf=lambda x: isinstance(x, layers.Leaf))
+        return shapes, axes
+
+    # -- entry points ----------------------------------------------------------
+
+    def loss(self, params, batch):
+        loss, metrics = transformer.loss_fn(params, batch, self.cfg, self.rcfg)
+        return loss, metrics
+
+    def forward_logits(self, params, batch):
+        logits, _, _ = transformer.forward(params, batch, self.cfg, self.rcfg)
+        return logits
+
+    def prefill(self, params, batch):
+        """Returns (last-token logits, populated cache) for serving."""
+        logits, _, cache = transformer.forward(
+            params, batch, self.cfg, self.rcfg, build_cache=True)
+        return logits[:, -1], cache
+
+    def init_cache(self, batch_size: int, max_seq: int):
+        return transformer.init_cache(self.cfg, self.rcfg, batch_size, max_seq)
+
+    def cache_axes(self):
+        return transformer.cache_logical_axes(self.cfg)
+
+    def decode_step(self, params, batch, cache, t):
+        """One serving step: new token(s) at position t with a seq_len cache."""
+        logits, _, new_cache = transformer.forward(
+            params, batch, self.cfg, self.rcfg, cache=cache, t=t)
+        return logits[:, 0], new_cache
+
+    # -- input specs -----------------------------------------------------------
+
+    def input_specs(self, shape: InputShape, *, dtype=jnp.int32):
+        """ShapeDtypeStruct stand-ins for every model input of a cell."""
+        B, S = shape.global_batch, shape.seq_len
+        f32 = jnp.bfloat16 if self.rcfg.compute_dtype == jnp.bfloat16 else jnp.float32
+        if shape.kind in ("train", "prefill"):
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), dtype)}
+            if self.cfg.frontend:
+                specs["embeds"] = jax.ShapeDtypeStruct(
+                    (B, S, self.cfg.frontend_dim), f32)
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), dtype)
+            return specs
+        # decode: one new token; the KV/state cache covers seq_len positions.
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), dtype)}
+        if self.cfg.frontend:
+            specs["embeds"] = jax.ShapeDtypeStruct(
+                (B, 1, self.cfg.frontend_dim), f32)
+        return specs
+
+
+def build_model(arch: str, rcfg: Optional[RunConfig] = None,
+                *, reduced: bool = False) -> Model:
+    cfg = get_arch(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    return Model(cfg, rcfg)

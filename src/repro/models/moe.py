@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN — GShard/Switch-style dispatch & combine einsums.
+
+Two sharding modes (cf. DESIGN.md §Arch-applicability):
+  - "ep": expert dim sharded over 'model' (arctic 128e, jamba 16e). The
+    dispatch einsum keeps tokens batch-sharded; XLA inserts the all-to-all.
+  - "tp": each expert's d_ff sharded over 'model' (grok 8e < 16-way axis);
+    experts replicated, activations psum on the output contraction.
+
+Top-k routing with capacity factor; overflowed tokens are dropped (their
+combine weight is zero) — the dense-residual path (arctic) and the residual
+stream keep them alive.  A load-balance auxiliary loss is returned.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models import layers
+from repro.parallel.sharding_rules import AxisRules
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, *, gated: bool,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    E, F = cfg.num_experts, cfg.expert_d_ff
+    ff_axis = "expert_ff_tp" if cfg.sharding == "tp" else "expert_ff"
+    e_axis = None if cfg.sharding == "tp" else "expert"
+    p = {
+        "router": layers.dense_init(
+            ks[0], (d_model, E), ("embed", None), dtype),
+        "w_in": layers.dense_init(
+            ks[1], (E, d_model, F), (e_axis, "embed", ff_axis), dtype,
+            fan_in=d_model),
+        "w_out": layers.dense_init(
+            ks[2], (E, F, d_model), (e_axis, ff_axis, "embed"), dtype,
+            fan_in=F),
+    }
+    if gated:
+        p["w_gate"] = layers.dense_init(
+            ks[3], (E, d_model, F), (e_axis, "embed", ff_axis), dtype,
+            fan_in=d_model)
+    if cfg.dense_residual:
+        p["dense"] = layers.mlp_init(
+            ks[4], d_model, cfg.dense_d_ff, gated=gated, dtype=dtype)
+    return p
+
+
+def _top_k_mask(probs: jax.Array, k: int):
+    """probs (..., E) -> (weights, one_hot_assignments list per slot)."""
+    out_w, out_idx = jax.lax.top_k(probs, k)  # (..., k)
+    return out_w, out_idx
+
+
+def moe_apply(
+    params: dict,
+    x: jax.Array,  # (B, S, D)
+    cfg: MoEConfig,
+    rules: AxisRules,
+    *,
+    capacity_factor: float = 1.25,
+    group_size: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux load-balance loss scalar).
+
+    Tokens are re-grouped to (n_groups, group_size) GShard-style before
+    dispatch: the one-hot dispatch tensor is (G, g, E, C) with per-group
+    capacity C = cf*g*k/E, so its footprint scales with tokens*g*cf*k
+    instead of tokens*S*cf*k (a 4096-token sequence would otherwise
+    materialize a multi-TB dispatch mask at pod scale)."""
+    B0, S0, D = x.shape
+    tokens = B0 * S0
+    g = group_size
+    while tokens % g:
+        g //= 2
+    x = x.reshape(tokens // g, g, D)
+    B, S, _ = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    C = max(1, int(capacity_factor * S * K / E))
+
+    router_logits = jnp.einsum(
+        "bsd,de->bse", x, params["router"],
+        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)          # (B,S,E)
+    gate_w, gate_idx = _top_k_mask(probs, K)                # (B,S,K)
+    gate_w = gate_w / jnp.maximum(
+        jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)
+
+    # Position of each token in its expert's buffer, per routing slot.
+    # one-hot over experts per slot: (B,S,K,E)
+    slot_onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+    # cumulative count along S and K gives the capacity position
+    flat = slot_onehot.reshape(B, S * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat         # (B,S*K,E)
+    pos_in_expert = jnp.sum(pos_in_expert * flat, axis=-1)  # (B,S*K)
+    pos_in_expert = pos_in_expert.reshape(B, S, K)
+    keep = pos_in_expert < C                                # drop overflow
+    gate_w = gate_w * keep
+
+    # dispatch (B,S,E,C) = sum_k onehot_e * onehot_c
+    cap_onehot = jax.nn.one_hot(pos_in_expert, C, dtype=jnp.float32)  # (B,S,K,C)
+    dispatch = jnp.einsum(
+        "bske,bskc->bsec", slot_onehot, cap_onehot * keep[..., None])
+    combine = jnp.einsum(
+        "bske,bskc->bsec", slot_onehot * gate_w[..., None], cap_onehot)
+
+    # dispatch/combine einsums run in the compute dtype: at pod scale the
+    # combine contraction over the (model-sharded) expert dim is all-reduced
+    # — f32 here would double that ICI traffic (§Perf, arctic hillclimb).
+    expert_in = jnp.einsum(
+        "bsec,bsd->becd", dispatch.astype(x.dtype), x)
+    expert_in = rules.constrain(expert_in, "batch", "expert", None, "embed_act")
+
+    h = jnp.einsum("becd,edf->becf", expert_in, params["w_in"])
+    if "w_gate" in params:
+        g = jnp.einsum("becd,edf->becf", expert_in, params["w_gate"])
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    expert_out = jnp.einsum("becf,efd->becd", h, params["w_out"])
+    expert_out = rules.constrain(expert_out, "batch", "expert", None, "embed_act")
+
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), expert_out)
+
+    if cfg.dense_residual:
+        y = y + layers.mlp_apply(params["dense"], x, rules)
+
+    # Switch-style load-balance aux loss.
+    frac_tokens = jnp.mean(slot_onehot[:, :, 0, :], axis=(0, 1))  # top-1 assign
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    y = y.reshape(B0, S0, D)
+    return rules.constrain(y, "batch", "seq", "embed_act"), aux

@@ -1,0 +1,390 @@
+"""Composable decoder: attention / mamba / sLSTM / mLSTM blocks interleaved
+by ``ArchConfig.layer_pattern``, scanned over pattern repeats so compile time
+is O(1) in depth.  One code path serves all 10 assigned architectures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_lib
+from repro.models import layers, mamba as mamba_lib, moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+from repro.parallel.sharding_rules import AxisRules
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """Runtime knobs orthogonal to the architecture."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    cache_dtype: Any = jnp.float32
+    rules: AxisRules = dataclasses.field(default_factory=AxisRules.null)
+    q_block: int = 512
+    kv_block: int = 512
+    remat: str = "none"           # none | full | dots
+    capacity_factor: float = 1.25
+    decode_attn: str = "local"    # local | sharded
+    mesh: Any = None              # required for decode_attn == "sharded"
+    dp_axes: tuple = ("data",)
+    scan_layers: bool = True
+    moe_aux_weight: float = 0.01
+    moe_group_size: int = 512
+    attn_expand_kv: bool = False  # True for the TP pod path (see attention.py)
+
+
+# ---------------------------------------------------------------------------
+# Per-block init
+# ---------------------------------------------------------------------------
+
+
+def _has_ffn(cfg: ArchConfig, pos: int) -> bool:
+    b = cfg.layer_pattern[pos]
+    if cfg.ffn_on == "none":
+        return False
+    if cfg.ffn_on == "attn" and b != "attn":
+        return False
+    return cfg.d_ff > 0 or cfg.moe is not None
+
+
+def _is_moe(cfg: ArchConfig, pos: int) -> bool:
+    if cfg.moe is None or not _has_ffn(cfg, pos):
+        return False
+    moe_set = set(cfg.moe_layer_indices)
+    return (not moe_set) or (pos in moe_set)
+
+
+def _attn_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.dense_init(ks[0], (d, H, hd), ("embed", "heads", "head_dim"), dtype),
+        "wk": layers.dense_init(ks[1], (d, KV, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wv": layers.dense_init(ks[2], (d, KV, hd), ("embed", "kv_heads", "head_dim"), dtype),
+        "wo": layers.dense_init(ks[3], (H, hd, d), ("heads", "head_dim", "embed"),
+                                dtype, fan_in=H * hd),
+    }
+
+
+def _block_init(key, cfg: ArchConfig, pos: int, dtype) -> dict:
+    btype = cfg.layer_pattern[pos]
+    ks = jax.random.split(key, 3)
+    p: dict = {"norm1": layers.rmsnorm_init(cfg.d_model, dtype)}
+    if btype == "attn":
+        p["attn"] = _attn_init(ks[0], cfg, dtype)
+    elif btype == "mamba":
+        p["mamba"] = mamba_lib.mamba_init(ks[0], cfg.d_model, cfg.ssm, dtype)
+    elif btype == "slstm":
+        p["cell"] = xlstm_lib.slstm_init(ks[0], cfg.d_model, cfg.num_heads,
+                                         cfg.xlstm, dtype)
+    elif btype == "mlstm":
+        p["cell"] = xlstm_lib.mlstm_init(ks[0], cfg.d_model, cfg.num_heads,
+                                         cfg.xlstm, dtype)
+    else:
+        raise ValueError(btype)
+    if _has_ffn(cfg, pos):
+        p["norm2"] = layers.rmsnorm_init(cfg.d_model, dtype)
+        if _is_moe(cfg, pos):
+            p["ffn"] = moe_lib.moe_init(ks[1], cfg.d_model, cfg.moe,
+                                        gated=cfg.gated_mlp, dtype=dtype)
+        else:
+            p["ffn"] = layers.mlp_init(ks[1], cfg.d_model, cfg.d_ff,
+                                       gated=cfg.gated_mlp, dtype=dtype)
+    return p
+
+
+def init_params(key, cfg: ArchConfig, rcfg: RunConfig):
+    ks = jax.random.split(key, 4)
+    dtype = rcfg.param_dtype
+    params: dict = {
+        "embed": layers.embedding_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": layers.dense_init(
+            ks[1], (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), dtype,
+            fan_in=cfg.d_model),
+    }
+    if cfg.frontend:
+        params["frontend_proj"] = layers.dense_init(
+            ks[2], (cfg.frontend_dim, cfg.d_model), (None, "embed"), dtype,
+            fan_in=cfg.frontend_dim)
+
+    def group_init(gkey):
+        gks = jax.random.split(gkey, len(cfg.layer_pattern))
+        return {
+            f"pos{i}": _block_init(gk, cfg, i, dtype)
+            for i, gk in enumerate(gks)
+        }
+
+    R = cfg.num_pattern_repeats
+    gkeys = jax.random.split(ks[3], R)
+    stacked = jax.vmap(group_init)(gkeys)
+    # vmap strips Leaf axes metadata is wrong: rebuild Leafs with "layers" axis
+    template = group_init(gkeys[0])
+
+    def relabel(st, tp):
+        return layers.Leaf(st.value, ("layers",) + tp.axes)
+
+    params["blocks"] = jax.tree.map(
+        relabel, stacked, template, is_leaf=layers.is_leaf)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ArchConfig, rcfg: RunConfig, batch: int, max_seq: int):
+    """Per-pattern-position state stacked over repeats (leading R dim)."""
+    R = cfg.num_pattern_repeats
+    cache: dict = {}
+    for i, b in enumerate(cfg.layer_pattern):
+        if b == "attn":
+            shape = (R, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+            cache[f"pos{i}"] = {
+                "k": jnp.zeros(shape, rcfg.cache_dtype),
+                "v": jnp.zeros(shape, rcfg.cache_dtype),
+            }
+        elif b == "mamba":
+            sh = mamba_lib.mamba_state_shapes(batch, cfg.d_model, cfg.ssm)
+            cache[f"pos{i}"] = {
+                "ssm": jnp.zeros((R,) + sh["ssm"], jnp.float32),
+                "conv": jnp.zeros((R,) + sh["conv"], rcfg.cache_dtype),
+            }
+        elif b == "slstm":
+            st = xlstm_lib.slstm_init_state(batch, cfg.d_model)
+            cache[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (R,) + a.shape), st)
+        elif b == "mlstm":
+            E = xlstm_lib._round64(cfg.xlstm.proj_factor_mlstm * cfg.d_model)
+            st = xlstm_lib.mlstm_init_state(batch, cfg.num_heads,
+                                            E // cfg.num_heads)
+            cache[f"pos{i}"] = jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (R,) + a.shape), st)
+    return cache
+
+
+def cache_logical_axes(cfg: ArchConfig):
+    """Logical axes for the cache pytree (for sharding specs)."""
+    axes: dict = {}
+    for i, b in enumerate(cfg.layer_pattern):
+        if b == "attn":
+            a = ("layers", "cache_batch", "cache_seq", "cache_heads", None)
+            axes[f"pos{i}"] = {"k": a, "v": a}
+        elif b == "mamba":
+            axes[f"pos{i}"] = {
+                "ssm": ("layers", "cache_batch", "inner", None),
+                "conv": ("layers", "cache_batch", None, "inner"),
+            }
+        elif b == "slstm":
+            a = ("layers", "cache_batch", None)
+            axes[f"pos{i}"] = {"c": a, "n": a, "h": a, "m": a}
+        elif b == "mlstm":
+            axes[f"pos{i}"] = {
+                "C": ("layers", "cache_batch", "heads", None, None),
+                "n": ("layers", "cache_batch", "heads", None),
+                "m": ("layers", "cache_batch", "heads"),
+            }
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+
+def _attn_apply(p, x, cfg: ArchConfig, rcfg: RunConfig, *, positions,
+                cache=None, t=None, build_cache=False):
+    rules = rcfg.rules
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = rules.constrain(q, "batch", "seq", "heads", "head_dim")
+    k = rules.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = rules.constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    q = attn_lib.apply_rope(q, positions, cfg.rope_theta)
+    k = attn_lib.apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is None:
+        o = attn_lib.flash_attention(
+            q, k, v, causal=True, q_block=rcfg.q_block, kv_block=rcfg.kv_block,
+            gqa_grouped=not rcfg.attn_expand_kv)
+        if build_cache:
+            new_cache = {"k": k.astype(rcfg.cache_dtype),
+                         "v": v.astype(rcfg.cache_dtype)}
+    else:
+        assert S == 1 and t is not None
+        kc, vc = cache["k"], cache["v"]
+        kn = k.astype(kc.dtype)
+        vn = v.astype(vc.dtype)
+        if rcfg.decode_attn == "sharded":
+            o, kc, vc = attn_lib.decode_attention_sharded(
+                q, kn, vn, kc, vc, t, mesh=rcfg.mesh, dp_axes=rcfg.dp_axes)
+        else:
+            o, kc, vc = attn_lib.decode_attention_local(q, kn, vn, kc, vc, t)
+        new_cache = {"k": kc, "v": vc}
+    out = jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), p["wo"])
+    return rules.constrain(out, "batch", "seq", "embed_act"), new_cache
+
+
+def _block_apply(p, x, cfg: ArchConfig, rcfg: RunConfig, pos: int, *,
+                 positions, cache=None, t=None, build_cache=False):
+    """Returns (x, aux_loss, new_cache)."""
+    btype = cfg.layer_pattern[pos]
+    rules = rcfg.rules
+    aux = jnp.zeros((), jnp.float32)
+    xn = layers.rmsnorm_apply(p["norm1"], x, eps=cfg.norm_eps)
+    decode = cache is not None
+    want_state = decode or build_cache
+    if btype == "attn":
+        h, new_cache = _attn_apply(p["attn"], xn, cfg, rcfg,
+                                   positions=positions, cache=cache, t=t,
+                                   build_cache=build_cache)
+    elif btype == "mamba":
+        if want_state:
+            h, ssm, conv = mamba_lib.mamba_apply(
+                p["mamba"], xn, cfg.ssm, rules,
+                ssm_state=cache["ssm"] if decode else None,
+                conv_state=cache["conv"] if decode else None,
+                return_state=True)
+            new_cache = {"ssm": ssm, "conv": conv}
+        else:
+            h = mamba_lib.mamba_apply(p["mamba"], xn, cfg.ssm, rules)
+            new_cache = None
+    elif btype == "slstm":
+        if want_state:
+            h, st = xlstm_lib.slstm_apply(
+                p["cell"], xn, cfg.num_heads, rules,
+                state=cache if decode else None, return_state=True)
+            new_cache = st
+        else:
+            h = xlstm_lib.slstm_apply(p["cell"], xn, cfg.num_heads, rules)
+            new_cache = None
+    elif btype == "mlstm":
+        if want_state:
+            h, st = xlstm_lib.mlstm_apply(
+                p["cell"], xn, cfg.num_heads, cfg.xlstm, rules,
+                state=cache if decode else None, return_state=True)
+            new_cache = st
+        else:
+            h = xlstm_lib.mlstm_apply(p["cell"], xn, cfg.num_heads,
+                                      cfg.xlstm, rules)
+            new_cache = None
+    else:
+        raise ValueError(btype)
+    x = x + h
+    if _has_ffn(cfg, pos):
+        xn2 = layers.rmsnorm_apply(p["norm2"], x, eps=cfg.norm_eps)
+        if _is_moe(cfg, pos):
+            y, aux = moe_lib.moe_apply(
+                p["ffn"], xn2, cfg.moe, rules,
+                capacity_factor=rcfg.capacity_factor,
+                group_size=rcfg.moe_group_size)
+        else:
+            y = layers.mlp_apply(p["ffn"], xn2, rules)
+        x = x + y
+    return x, aux, new_cache
+
+
+def _group_apply(gp, x, gcache, *, cfg, rcfg, positions, t=None,
+                 build_cache=False):
+    aux_total = jnp.zeros((), jnp.float32)
+    new_gcache = {} if (gcache is not None or build_cache) else None
+    for i in range(len(cfg.layer_pattern)):
+        key = f"pos{i}"
+        c = gcache[key] if gcache is not None else None
+        x, aux, nc = _block_apply(gp[key], x, cfg, rcfg, i,
+                                  positions=positions, cache=c, t=t,
+                                  build_cache=build_cache)
+        aux_total = aux_total + aux
+        if new_gcache is not None:
+            new_gcache[key] = nc
+    return x, aux_total, new_gcache
+
+
+# ---------------------------------------------------------------------------
+# Full model forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, batch, cfg: ArchConfig, rcfg: RunConfig):
+    rules = rcfg.rules
+    x = layers.embedding_lookup(params["embed"], batch["tokens"], rules)
+    if cfg.frontend:
+        fe = jnp.einsum("bsf,fd->bsd", batch["embeds"].astype(x.dtype),
+                        params["frontend_proj"])
+        x = x + fe
+    return x.astype(rcfg.compute_dtype)
+
+
+def forward(params, batch, cfg: ArchConfig, rcfg: RunConfig, *,
+            cache=None, t=None, build_cache=False):
+    """Full forward. cache None => train/prefill over (B, S); else one-step
+    decode at position ``t``.  ``build_cache`` makes the full-sequence pass
+    also emit the populated decoding cache (serving prefill).
+    Returns (logits, aux_loss, new_cache)."""
+    x = _embed_inputs(params, batch, cfg, rcfg)
+    B, S = x.shape[:2]
+    if cache is None:
+        positions = jnp.arange(S)
+    else:
+        positions = t + jnp.arange(1)
+
+    group_fn = functools.partial(
+        _group_apply, cfg=cfg, rcfg=rcfg, positions=positions, t=t,
+        build_cache=build_cache)
+    if rcfg.remat == "full":
+        group_fn = jax.checkpoint(group_fn)
+    elif rcfg.remat == "dots":
+        group_fn = jax.checkpoint(
+            group_fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    blocks = params["blocks"]
+    if rcfg.scan_layers:
+        if cache is None:
+            def body(carry, gp):
+                xx, aux = carry
+                xx, aux_g, ngc = group_fn(gp, xx, None)
+                return (xx, aux + aux_g), ngc
+            (x, aux), new_cache = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), blocks)
+        else:
+            def body(carry, xs):
+                xx, aux = carry
+                gp, gc = xs
+                xx, aux_g, ngc = group_fn(gp, xx, gc)
+                return (xx, aux + aux_g), ngc
+            (x, aux), new_cache = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), (blocks, cache))
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        new_cache = None
+        R = cfg.num_pattern_repeats
+        caches = []
+        for r in range(R):
+            gp = jax.tree.map(lambda a: a[r], blocks)
+            gc = jax.tree.map(lambda a: a[r], cache) if cache is not None else None
+            x, aux_g, ngc = group_fn(gp, x, gc)
+            aux = aux + aux_g
+            caches.append(ngc)
+        if cache is not None or build_cache:
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+
+    x = layers.rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    logits = layers.lm_head_apply(params["lm_head"], x, rcfg.rules)
+    return logits, aux, new_cache
+
+
+def loss_fn(params, batch, cfg: ArchConfig, rcfg: RunConfig):
+    logits, aux, _ = forward(params, batch, cfg, rcfg)
+    ce = layers.softmax_cross_entropy(
+        logits, batch["labels"], batch.get("mask"))
+    return ce + rcfg.moe_aux_weight * aux, {"ce": ce, "moe_aux": aux}

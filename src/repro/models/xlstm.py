@@ -1,0 +1,172 @@
+"""xLSTM blocks (arXiv:2405.04517): sLSTM (scalar memory, exponential
+gating, head-block-diagonal recurrence) and mLSTM (matrix memory,
+attention-like key/value outer products).
+
+Both are implemented as exact recurrences via ``jax.lax.scan`` over time
+(train/prefill) and a single fused step for decode — the recurrent form is
+the oracle; a chunkwise-parallel mLSTM is a candidate §Perf optimization.
+
+Simplifications vs. the reference implementation (documented in DESIGN.md):
+no causal-conv preprocessing on the q/k path, GroupNorm replaced by RMSNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.models import layers
+from repro.parallel.sharding_rules import AxisRules
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _round64(x: float) -> int:
+    """Round projection widths up to a multiple of 64 — MXU/lane alignment
+    and mesh divisibility (1024*4/3 = 1365 would shard nowhere)."""
+    return max(64, int(-(-x // 64)) * 64)
+
+
+def slstm_init(key, d_model: int, num_heads: int, cfg: XLSTMConfig,
+               dtype=jnp.float32) -> dict:
+    dh = d_model // num_heads
+    E = _round64(cfg.proj_factor_slstm * d_model)
+    ks = jax.random.split(key, 4)
+    return {
+        # i, f, z, o stacked on last dim
+        "W": layers.dense_init(ks[0], (d_model, 4 * d_model), ("embed", "inner"), dtype),
+        "R": layers.dense_init(ks[1], (num_heads, dh, 4 * dh), ("heads", None, None),
+                               dtype, fan_in=dh),
+        "b": layers.zeros_init((4 * d_model,), ("inner",), dtype),
+        "up": layers.dense_init(ks[2], (d_model, E), ("embed", "inner"), dtype),
+        "down": layers.dense_init(ks[3], (E, d_model), ("inner", "embed"), dtype,
+                                  fan_in=E),
+    }
+
+
+def _slstm_cell(params, wx_t, state, num_heads: int):
+    """One sLSTM step. wx_t (B, 4D) precomputed W@x; state dict of (B, D)."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    B, D = h.shape
+    dh = D // num_heads
+    hh = h.reshape(B, num_heads, dh)
+    rh = jnp.einsum("bhd,hde->bhe", hh, params["R"]).reshape(B, 4 * D)
+    pre = (wx_t + rh).astype(jnp.float32)
+    i_t, f_t, z_t, o_t = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_g = jnp.exp(i_t - m_new)
+    f_g = jnp.exp(f_t + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_t)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(params: dict, x: jax.Array, num_heads: int, rules: AxisRules,
+                *, state=None, return_state: bool = False):
+    B, S, D = x.shape
+    wx = jnp.einsum("bsd,de->bse", x, params["W"]) + params["b"]  # (B,S,4D)
+    if state is None:
+        state = slstm_init_state(B, D)
+
+    def step(st, wx_t):
+        st = _slstm_cell(params, wx_t, st, num_heads)
+        return st, st["h"]
+
+    st, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                    # (B,S,D)
+    u = jax.nn.gelu(jnp.einsum("bsd,de->bse", h, params["up"]))
+    u = rules.constrain(u, "batch", "seq", "inner")
+    out = jnp.einsum("bse,ed->bsd", u, params["down"])
+    out = rules.constrain(out, "batch", "seq", "embed_act")
+    if return_state:
+        return out, st
+    return out
+
+
+def slstm_init_state(batch: int, d_model: int):
+    z = lambda: jnp.zeros((batch, d_model), jnp.float32)
+    return {"c": z(), "n": z(), "h": z(),
+            "m": jnp.full((batch, d_model), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_model: int, num_heads: int, cfg: XLSTMConfig,
+               dtype=jnp.float32) -> dict:
+    E = _round64(cfg.proj_factor_mlstm * d_model)
+    dh = E // num_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": layers.dense_init(ks[0], (d_model, 2 * E), ("embed", "inner"), dtype),
+        "Wq": layers.dense_init(ks[1], (num_heads, dh, dh), ("heads", None, None),
+                                dtype, fan_in=dh),
+        "Wk": layers.dense_init(ks[2], (num_heads, dh, dh), ("heads", None, None),
+                                dtype, fan_in=dh),
+        "Wv": layers.dense_init(ks[3], (num_heads, dh, dh), ("heads", None, None),
+                                dtype, fan_in=dh),
+        "w_if": layers.dense_init(ks[4], (E, 2 * num_heads), ("inner", None), dtype),
+        "out_proj": layers.dense_init(ks[5], (E, d_model), ("inner", "embed"),
+                                      dtype, fan_in=E),
+    }
+
+
+def mlstm_apply(params: dict, x: jax.Array, num_heads: int, cfg: XLSTMConfig,
+                rules: AxisRules, *, state=None, return_state: bool = False):
+    B, S, D = x.shape
+    E = _round64(cfg.proj_factor_mlstm * D)
+    H, dh = num_heads, E // num_heads
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    xz = rules.constrain(xz, "batch", "seq", "inner")
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xih = xi.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xih, params["Wq"])
+    k = jnp.einsum("bshd,hde->bshe", xih, params["Wk"]) / (dh ** 0.5)
+    v = jnp.einsum("bshd,hde->bshe", xih, params["Wv"])
+    gates = jnp.einsum("bse,eg->bsg", xi, params["w_if"]).astype(jnp.float32)
+    i_t, f_t = jnp.split(gates, 2, axis=-1)                       # (B,S,H)
+    f_t = -jax.nn.softplus(-f_t)  # log sigmoid: stable forget in log space
+
+    if state is None:
+        state = mlstm_init_state(B, H, dh)
+
+    def step(st, inp):
+        C, n, m = st["C"], st["n"], st["m"]
+        q_t, k_t, v_t, i_tt, f_tt = inp
+        q_t, k_t, v_t = (a.astype(jnp.float32) for a in (q_t, k_t, v_t))
+        m_new = jnp.maximum(f_tt + m, i_tt)                       # (B,H)
+        i_g = jnp.exp(i_tt - m_new)
+        f_g = jnp.exp(f_tt + m - m_new)
+        C_new = f_g[..., None, None] * C + i_g[..., None, None] * (
+            v_t[..., :, None] * k_t[..., None, :])                # (B,H,dh,dh)
+        n_new = f_g[..., None] * n + i_g[..., None] * k_t         # (B,H,dh)
+        num = jnp.einsum("bhve,bhe->bhv", C_new, q_t)
+        den = jnp.abs(jnp.einsum("bhe,bhe->bh", n_new, q_t))
+        den = jnp.maximum(den, jnp.exp(-m_new))
+        h_t = num / den[..., None]                                # (B,H,dh)
+        return {"C": C_new, "n": n_new, "m": m_new}, h_t
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, i_t, f_t))
+    st, hs = jax.lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, E).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", h, params["out_proj"])
+    out = rules.constrain(out, "batch", "seq", "embed_act")
+    if return_state:
+        return out, st
+    return out
+
+
+def mlstm_init_state(batch: int, num_heads: int, dh: int):
+    return {
+        "C": jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, num_heads, dh), jnp.float32),
+        "m": jnp.full((batch, num_heads), -1e30, jnp.float32),
+    }

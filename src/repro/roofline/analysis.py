@@ -1,0 +1,260 @@
+"""Three-term roofline analysis from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs_per_chip    / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip    / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` describes the post-SPMD *per-device* module,
+so the per-chip convention is used throughout (equivalent to the global
+formula HLO_FLOPs / (chips x peak)).  collective_bytes is not in
+cost_analysis: we regex the post-SPMD HLO text and sum the operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (the mandated convention; ring-traffic
+refinements are reported alongside in EXPERIMENTS.md).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# shape tokens like  bf16[16,1024]{1,0}  or  f32[]  appearing in operand lists
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?[a-z0-9\[\],{}\- ]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)|"
+    r"while\(.*?\).*?body=%?([\w\.\-]+).*?condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _split_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Computation name -> its instruction lines.  Computation headers sit
+    at column 0 and end with '{'; instructions are indented."""
+    comps: dict[str, list[str]] = {}
+    cur: Optional[str] = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            head = line.strip()
+            if head.startswith("ENTRY "):
+                head = head[len("ENTRY "):]
+            head = head.lstrip("%")
+            name = re.split(r"[\s(]", head, 1)[0]
+            cur = name
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _def_bytes_map(hlo_text: str) -> dict[str, int]:
+    """Instruction name -> bytes of its result (tuples summed)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type = shape tokens before the op name; take tokens up to
+        # the first alphabetic op word by scanning leading shape tokens
+        nbytes = 0
+        pos = 0
+        rhs = rhs.lstrip("(")
+        while True:
+            sm = _SHAPE_RE.match(rhs[pos:].lstrip(" ,"))
+            if not sm:
+                break
+            skip = len(rhs[pos:]) - len(rhs[pos:].lstrip(" ,"))
+            nbytes += _shape_bytes(sm.group(1), sm.group(2))
+            pos += skip + sm.end()
+            # skip layout annotation {1,0} if present
+            rest = rhs[pos:]
+            if rest.startswith("{"):
+                close = rest.find("}")
+                pos += close + 1
+            if rhs[pos:].lstrip(" ,").startswith(")"):
+                break
+        out[name] = nbytes
+    return out
+
+
+def _loop_trip_count(cond_lines: list[str]) -> int:
+    """jax scans lower to while(cond: compare(i, constant(R)))."""
+    best = 1
+    for ln in cond_lines:
+        for c in _CONST_RE.findall(ln):
+            best = max(best, int(c))
+    return best
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op, by type — multiplying
+    collectives inside while-loop bodies by the loop trip count (HLO cost
+    conventions count a loop body once; a scanned-layers model would
+    otherwise under-report its per-step collective traffic)."""
+    comps = _split_computations(hlo_text)
+    def_bytes = _def_bytes_map(hlo_text)
+
+    # find loop body multipliers: body computation name -> trip count
+    multiplier: dict[str, int] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if "while(" not in ln:
+                continue
+            m = _WHILE_RE.search(ln)
+            if m:
+                cond = m.group(1) or m.group(4)
+                body = m.group(2) or m.group(3)
+                trips = _loop_trip_count(comps.get(cond, []))
+                multiplier[body] = max(multiplier.get(body, 1), trips)
+
+    # effective multiplier per computation = product of trip counts of all
+    # loop bodies along the call path from entry (fixpoint over call edges)
+    call_edges: dict[str, set] = {c: set() for c in comps}
+    name_set = set(comps)
+    for cname, lines in comps.items():
+        for ln in lines:
+            for callee in re.findall(r"%([\w\.\-]+)", ln):
+                if callee in name_set and callee != cname:
+                    call_edges[cname].add(callee)
+
+    eff_mult: dict[str, int] = {c: 1 for c in comps}
+    for _ in range(50):
+        changed = False
+        for cname, callees in call_edges.items():
+            for callee in callees:
+                m = eff_mult[cname] * multiplier.get(callee, 1)
+                if m > eff_mult[callee]:
+                    eff_mult[callee] = m
+                    changed = True
+        if not changed:
+            break
+
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    op_re = re.compile(
+        r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start)?\(([^)]*)\)")
+    for cname, lines in comps.items():
+        mult = eff_mult[cname]
+        for line in lines:
+            if "-done(" in line:
+                continue  # counted at -start
+            m = op_re.search(line)
+            if not m:
+                continue
+            kind, _, operands = m.group(1), m.group(2), m.group(3)
+            nbytes = 0
+            for opname in re.findall(r"%([\w\.\-]+)", operands):
+                nbytes += def_bytes.get(opname, 0)
+            if nbytes == 0:
+                # fallback: result shape from the def line itself
+                dm = _DEF_RE.match(line)
+                if dm:
+                    nbytes = def_bytes.get(dm.group(1), 0)
+            out[kind] += nbytes * mult
+            counts[kind] += mult
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    model_flops: float = 0.0
+    n_chips: int = 1
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        """MODEL_FLOPS / (global HLO flops): remat/redundancy waste."""
+        total = self.flops_per_chip * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable makespan bound: the score."""
+        ideal = self.model_flops / (self.n_chips * PEAK_FLOPS)
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "n_chips": self.n_chips,
+        }
+
+
+def roofline_from_compiled(compiled, *, n_chips: int,
+                           model_flops: float = 0.0,
+                           hlo_text: Optional[str] = None) -> RooflineTerms:
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll["total"] / ICI_BW,
+        flops_per_chip=flops,
+        bytes_per_chip=byts,
+        coll_bytes_per_chip=float(coll["total"]),
+        model_flops=model_flops,
+        n_chips=n_chips,
+    )

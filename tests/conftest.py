@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests must see the real single CPU device (the 512-device flag is only
+# ever set inside launch/dryrun.py's own process)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)

@@ -1,0 +1,65 @@
+"""Analytical baselines (Liu et al., Werkhoven et al.) + classifier."""
+import numpy as np
+
+from repro.core.analytical import (ProgramProbe, liu_config, probe_from_features,
+                                   werkhoven_config)
+from repro.core.classifier import KNNClassifier, merge_labels
+from repro.core.features import RAW_FEATURE_NAMES
+from repro.core.stream_config import StreamConfig
+
+
+def test_liu_transfer_dominated_gives_two_tasks():
+    probe = ProgramProbe(n_rows=1024, bytes_h2d=1e8, bytes_d2h=1e6,
+                         t_transfer=10e-3, t_kernel=1e-3)
+    cfg = liu_config(probe)
+    assert cfg.tasks == 2  # paper: m = N/2 for transfer-dominated
+
+
+def test_liu_kernel_dominated_scales_with_overhead():
+    probe = ProgramProbe(n_rows=4096, bytes_h2d=1e7, bytes_d2h=1e5,
+                         t_transfer=1e-3, t_kernel=50e-3)
+    cfg = liu_config(probe)
+    assert 1 <= cfg.tasks <= 64
+    assert cfg.partitions == cfg.tasks  # XeonPhi convention (paper §5.2)
+
+
+def test_werkhoven_returns_valid_config():
+    probe = ProgramProbe(n_rows=2048, bytes_h2d=5e7, bytes_d2h=5e7,
+                         t_transfer=5e-3, t_kernel=5e-3)
+    cfg = werkhoven_config(probe)
+    assert cfg.tasks >= 1 and cfg.partitions == cfg.tasks
+
+
+def test_werkhoven_prefers_more_tasks_when_overlappable():
+    # kernel ~ transfer => pipelining helps => more than one task
+    probe = ProgramProbe(n_rows=2048, bytes_h2d=1e8, bytes_d2h=1e8,
+                         t_transfer=20e-3, t_kernel=20e-3)
+    assert werkhoven_config(probe).tasks > 1
+
+
+def test_probe_from_features_roundtrip():
+    feats = dict(zip(RAW_FEATURE_NAMES, np.arange(len(RAW_FEATURE_NAMES),
+                                                  dtype=float)))
+    feats["loop_count"] = 128
+    feats["dts"] = 1e6
+    feats["out_bytes"] = 1e5
+    feats["t_transfer_us"] = 100.0
+    feats["t_compute_us"] = 900.0
+    p = probe_from_features(feats)
+    assert p.n_rows == 128 and p.t_kernel == 900e-6
+
+
+def test_label_merging_removes_rare_labels():
+    labels = [StreamConfig(1, 8)] * 5 + [StreamConfig(16, 64)]  # one rare
+    merged = merge_labels(labels, min_count=2)
+    assert merged.count(StreamConfig(1, 8)) == 6
+
+
+def test_knn_classifier_predicts_seen_label():
+    rng = np.random.default_rng(0)
+    X = np.concatenate([rng.normal(0, 0.1, (10, 5)),
+                        rng.normal(5, 0.1, (10, 5))])
+    labels = [StreamConfig(1, 4)] * 10 + [StreamConfig(8, 32)] * 10
+    clf = KNNClassifier.train(X, labels, k=3)
+    assert clf.predict(np.zeros(5)) == StreamConfig(1, 4)
+    assert clf.predict(np.full(5, 5.0)) == StreamConfig(8, 32)

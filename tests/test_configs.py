@@ -1,0 +1,86 @@
+"""Architecture config registry: exact specs + derived quantities."""
+import pytest
+
+from repro.configs.base import ALL_SHAPES, SHAPES, get_arch, list_archs
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+    "stablelm-3b": (32, 2560, 32, 32, 6912, 50304),
+    "yi-9b": (48, 4096, 32, 4, 11008, 64000),
+    "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+    "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+}
+
+# published total parameter counts (billions) and tolerance
+PARAM_CHECKS = {
+    "arctic-480b": (480, 0.05),
+    "grok-1-314b": (314, 0.05),
+    "jamba-1.5-large-398b": (398, 0.05),
+    "starcoder2-15b": (15.5, 0.10),
+    "pixtral-12b": (12.4, 0.10),
+    "yi-9b": (8.8, 0.10),
+    "codeqwen1.5-7b": (7.3, 0.15),
+    "xlstm-350m": (0.35, 0.20),
+}
+
+
+def test_all_ten_archs_registered():
+    assert len(list_archs()) == 10
+    assert set(list_archs()) == set(EXPECTED)
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_exact_config(name):
+    c = get_arch(name)
+    exp = EXPECTED[name]
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+            c.d_ff, c.vocab_size) == exp
+
+
+@pytest.mark.parametrize("name,target", sorted(PARAM_CHECKS.items()))
+def test_param_counts_vs_published(name, target):
+    billions, tol = target
+    got = get_arch(name).param_counts()["total"] / 1e9
+    assert abs(got - billions) / billions < tol, (name, got, billions)
+
+
+def test_jamba_active_params():
+    pc = get_arch("jamba-1.5-large-398b").param_counts()
+    assert abs(pc["active"] / 1e9 - 94) / 94 < 0.05  # paper: 94B active
+
+
+def test_long_context_applicability():
+    # sub-quadratic archs run long_500k; full-attention archs skip it
+    subq = {a for a in list_archs() if get_arch(a).subquadratic}
+    assert subq == {"jamba-1.5-large-398b", "xlstm-350m"}
+    for a in list_archs():
+        shapes = {s.name for s in get_arch(a).shapes()}
+        assert ("long_500k" in shapes) == (a in subq)
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= shapes
+
+
+def test_cell_count_is_40():
+    # 10 archs x 4 shapes assigned; 32 run + 8 documented skips = 40 cells
+    total = sum(len(ALL_SHAPES) for _ in list_archs())
+    runnable = sum(len(get_arch(a).shapes()) for a in list_archs())
+    skipped = sum(len(get_arch(a).skipped_shapes()) for a in list_archs())
+    assert total == 40 and runnable == 32 and skipped == 8
+
+
+def test_reduced_configs_are_tiny():
+    for a in list_archs():
+        r = get_arch(a).reduced()
+        assert r.d_model <= 64 and r.vocab_size <= 256
+        assert r.param_counts()["total"] < 5e6
+
+
+def test_model_flops_ordering():
+    c = get_arch("yi-9b")
+    f = {s.name: c.model_flops(s) for s in c.shapes()}
+    assert f["train_4k"] > f["prefill_32k"] > f["decode_32k"]

@@ -1,0 +1,79 @@
+"""Optimizer + data pipeline + grad compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, PrefetchFeeder, SyntheticLM
+from repro.optim import optimizer as opt_lib
+from repro.optim.grad_compression import dequantize_int8, quantize_int8
+
+
+def test_adamw_minimizes_quadratic():
+    cfg = opt_lib.AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                              weight_decay=0.0, clip_norm=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = opt_lib.init_state(params, cfg)
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(100):
+        grads = jax.grad(loss)(params)
+        params, state, _ = opt_lib.apply_updates(params, grads, state, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_lr_schedule_shapes():
+    cfg = opt_lib.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              schedule="cosine")
+    lrs = [float(opt_lib.lr_at(cfg, jnp.int32(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 1.0) < 1e-6          # end of warmup
+    assert lrs[-1] < 1e-3                     # decayed to ~0
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:-1], lrs[2:]))
+
+
+def test_grad_clipping():
+    cfg = opt_lib.AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=1,
+                              total_steps=10)
+    params = {"x": jnp.zeros(3)}
+    state = opt_lib.init_state(params, cfg)
+    huge = {"x": jnp.full(3, 1e6)}
+    _, _, om = opt_lib.apply_updates(params, huge, state, cfg)
+    assert float(om["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_bf16_optimizer_state():
+    cfg = opt_lib.AdamWConfig(state_dtype=jnp.bfloat16, warmup_steps=1,
+                              total_steps=10)
+    params = {"x": jnp.ones(4)}
+    state = opt_lib.init_state(params, cfg)
+    assert state["m"]["x"].dtype == jnp.bfloat16
+    grads = {"x": jnp.ones(4)}
+    p2, s2, _ = opt_lib.apply_updates(params, grads, state, cfg)
+    assert s2["v"]["x"].dtype == jnp.bfloat16
+    assert bool(jnp.isfinite(p2["x"]).all())
+
+
+def test_synthetic_data_restart_determinism():
+    """Batch k is identical after a simulated restart (exactly-once feed)."""
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=4, seed=3)
+    src = SyntheticLM(cfg)
+    b5 = src.batch_at(5)
+    b5_again = SyntheticLM(cfg).batch_at(5)
+    np.testing.assert_array_equal(b5["tokens"], b5_again["tokens"])
+    assert not np.array_equal(b5["tokens"], src.batch_at(6)["tokens"])
+
+
+def test_prefetch_feeder_order():
+    cfg = DataConfig(vocab_size=50, seq_len=4, global_batch=2, seed=0)
+    feeder = PrefetchFeeder(SyntheticLM(cfg), depth=2, start_step=10)
+    try:
+        for expect in (10, 11, 12):
+            step, batch = feeder.next()
+            assert step == expect
+            assert batch["tokens"].shape == (2, 4)
+    finally:
+        feeder.stop()
+
+
+def test_quantize_roundtrip_zero():
+    q, s = quantize_int8(jnp.zeros(8))
+    assert float(jnp.abs(dequantize_int8(q, s)).max()) == 0.0

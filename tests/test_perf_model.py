@@ -1,0 +1,94 @@
+"""Performance model: feature pipeline + MLP regression (paper §3)."""
+import numpy as np
+import pytest
+
+from repro.core.features import N_CONFIG_FEATURES, RAW_FEATURE_NAMES, config_features
+from repro.core.perf_model import (FeaturePipeline, ForestRegressor,
+                                   KernelRidgeRBF, PerformanceModel,
+                                   TreeRegressor)
+from repro.core.stream_config import StreamConfig
+
+
+N_SYN_FEATURES = 6  # few noise dims so PCA(9) keeps the config signal —
+# the real 22-feature pipeline is exercised end-to-end in test_system.py
+
+
+def _synthetic(n=600, seed=0, n_feat=N_SYN_FEATURES):
+    """Speedup = f(features, config) with a known sweet spot."""
+    rng = np.random.default_rng(seed)
+    X = []
+    y = []
+    for _ in range(n):
+        feats = rng.normal(size=n_feat)
+        ratio = feats[-1]  # pretend comp/comm ratio
+        p = 2 ** rng.integers(0, 5)
+        t = 2 ** rng.integers(0, 6)
+        cfgf = config_features(p, t)
+        # ground truth: best tasks grows with ratio; partitions penalized
+        opt_logt = 2.0 + ratio
+        speed = 1.5 - 0.15 * (np.log2(t) - opt_logt) ** 2 - 0.1 * np.log2(p)
+        speed += rng.normal() * 0.02
+        X.append(np.concatenate([feats, cfgf]))
+        y.append(max(speed, 0.1))
+    return np.asarray(X), np.asarray(y)
+
+
+def test_pipeline_shapes_and_pruning():
+    X, y = _synthetic()
+    # duplicate a column to force pruning
+    X2 = np.concatenate([X, X[:, :1] * 2.0], axis=1)
+    pipe = FeaturePipeline.fit(X2, y, n_components=9)
+    assert len(pipe.keep_idx) < X2.shape[1]  # pruned the duplicate
+    Z = pipe.transform(X2)
+    assert Z.shape[0] == len(y) and Z.shape[1] <= 9
+    yn = pipe.transform_y(y)
+    assert abs(yn.mean()) < 1e-8 and abs(yn.std() - 1) < 1e-6
+    np.testing.assert_allclose(pipe.inverse_y(yn), y, rtol=1e-6)
+
+
+def test_mlp_learns_synthetic_speedups():
+    X, y = _synthetic()
+    m = PerformanceModel.train(X, y, epochs=500)
+    pred = m.predict(X)
+    mse = float(np.mean((pred - y) ** 2))
+    assert mse < 0.05, mse
+
+
+def test_model_ranks_configs_sensibly():
+    X, y = _synthetic()
+    m = PerformanceModel.train(X, y, epochs=500)
+    feats = np.zeros(N_SYN_FEATURES)
+    feats[-1] = 1.0  # ratio=1 -> optimal log2(t)=3
+    cfgs = [StreamConfig(1, t) for t in (1, 2, 4, 8, 16, 32)]
+    preds = m.predict_configs(feats, cfgs)
+    best = cfgs[int(np.argmax(preds))]
+    assert best.tasks in (4, 8, 16), best  # near the true optimum 8
+
+
+def test_generalizes_to_unseen_configs():
+    """The regression model scores configs never present in training
+    (the key advantage over the classifier, paper §6.4)."""
+    X, y = _synthetic()
+    m = PerformanceModel.train(X, y, epochs=300)
+    feats = np.zeros(N_SYN_FEATURES)
+    unseen = StreamConfig(3, 24)  # non-power-of-two, never in training
+    pred = m.predict_configs(feats, [unseen])
+    assert np.isfinite(pred).all()
+
+
+@pytest.mark.parametrize("cls", [TreeRegressor, ForestRegressor,
+                                 KernelRidgeRBF])
+def test_alternative_learners(cls):
+    X, y = _synthetic(n=400)
+    m = cls.train(X, y)
+    pred = m.predict(X)
+    assert np.isfinite(pred).all()
+    mse = float(np.mean((pred - y) ** 2))
+    assert mse < 0.25, (cls.__name__, mse)
+
+
+def test_config_features_monotone():
+    a = config_features(1, 1)
+    b = config_features(4, 16)
+    assert a.shape == (N_CONFIG_FEATURES,)
+    assert b[0] > a[0] and b[1] > a[1]

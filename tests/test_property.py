@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint.checkpointer import _flatten, _unflatten
+from repro.core.features import config_features
+from repro.core.perf_model import FeaturePipeline
+from repro.core.stream_config import StreamConfig
+from repro.models.attention import flash_attention, reference_attention
+from repro.optim.grad_compression import dequantize_int8, quantize_int8
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    B=st.integers(1, 2),
+    S=st.integers(1, 48),
+    KV=st.sampled_from([1, 2, 4]),
+    G=st.sampled_from([1, 2, 3]),
+    hd=st.sampled_from([4, 8, 16]),
+    qb=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_invariant(B, S, KV, G, hd, qb, seed):
+    """Blocked online-softmax == naive attention for ALL shapes/blocks."""
+    H = KV * G
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    out = flash_attention(q, k, v, q_block=qb, kv_block=qb)
+    ref = reference_attention(q, k, v)
+    assert jnp.allclose(out, ref, atol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(1e-3, 1e3),
+       n=st.integers(1, 512))
+def test_int8_quantization_error_bound(seed, scale, n):
+    """|dequant(quant(g)) - g| <= scale_step/2 elementwise."""
+    g = np.random.default_rng(seed).normal(0, scale, n).astype(np.float32)
+    q, s = quantize_int8(jnp.asarray(g))
+    back = dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(back - g))) <= float(s) * 0.5 + 1e-6
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1),
+       rows=st.integers(30, 200),
+       cols=st.integers(3, 12),
+       ncomp=st.integers(1, 9))
+def test_feature_pipeline_invariants(seed, rows, cols, ncomp):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(rows, cols))
+    y = rng.normal(size=rows)
+    pipe = FeaturePipeline.fit(X, y, n_components=ncomp)
+    Z = pipe.transform(X)
+    assert Z.shape[0] == rows and Z.shape[1] <= ncomp
+    assert np.isfinite(Z).all()
+    np.testing.assert_allclose(pipe.inverse_y(pipe.transform_y(y)), y,
+                               rtol=1e-6, atol=1e-8)
+
+
+@settings(**SETTINGS)
+@given(p=st.sampled_from([1, 2, 4, 8, 16, 32]),
+       t=st.sampled_from([1, 2, 4, 8, 16, 32, 64]))
+def test_config_features_finite(p, t):
+    f = config_features(p, t)
+    assert np.isfinite(f).all()
+    assert StreamConfig(p, t).as_tuple() == (p, t)
+
+
+@settings(**SETTINGS)
+@given(st.recursive(
+    st.integers(0, 5).map(lambda n: np.arange(n, dtype=np.float32)),
+    lambda children: st.dictionaries(
+        st.text(alphabet="abcdef", min_size=1, max_size=4), children,
+        min_size=1, max_size=3),
+    max_leaves=8).filter(lambda t: isinstance(t, dict)))
+def test_checkpoint_flatten_roundtrip(tree):
+    back = _unflatten(_flatten(tree))
+    la, lb = jax.tree.leaves(tree), jax.tree.leaves(back)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(a, b)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), rows=st.integers(8, 64),
+       eps=st.floats(1e-6, 1e-3))
+def test_rmsnorm_output_scale(seed, rows, eps):
+    """RMSNorm output has unit RMS when scale=1."""
+    from repro.models.layers import rmsnorm_apply
+    x = np.random.default_rng(seed).normal(2.0, 3.0, (rows, 32)).astype(
+        np.float32)
+    y = rmsnorm_apply({"scale": jnp.ones(32)}, jnp.asarray(x), eps=eps)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    assert jnp.allclose(rms, 1.0, atol=1e-2)
