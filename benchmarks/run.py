@@ -6,6 +6,7 @@ run also profiles the 39-program suite).
 
     PYTHONPATH=src python -m benchmarks.run [--programs a,b] [--datasets N]
     PYTHONPATH=src python -m benchmarks.run --quick    # tiny subset
+    PYTHONPATH=src python -m benchmarks.run --compare-backends  # executor A/B
 
 A dry-run roofline summary (from benchmarks/data/dryrun/*.json, produced
 by benchmarks/dryrun_sweep.py) is appended when available.
@@ -21,12 +22,43 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
 
+import numpy as np  # noqa: E402
+
 from repro.core import dataset as ds  # noqa: E402
+from repro.core.backends import list_backends  # noqa: E402
+from repro.core.stream_config import StreamConfig  # noqa: E402
+from repro.core.streams import StreamedRunner  # noqa: E402
+from repro.core.workloads import get_workload  # noqa: E402
 
 from benchmarks import paper_figures as pf  # noqa: E402
 
 QUICK_PROGRAMS = ["vecadd", "binomial", "sgemm", "jacobi-1d", "mri-q",
                   "blackscholes", "dotprod", "fwt"]
+
+COMPARE_PROGRAMS = ["vecadd", "sgemm", "blackscholes"]
+COMPARE_CONFIGS = [StreamConfig(1, 8), StreamConfig(4, 8),
+                   StreamConfig(8, 16)]
+
+
+def compare_backends(programs=None, *, reps: int = 3) -> list[str]:
+    """Executor-backend A/B: every runner backend on the same
+    (workload, config) cells, vs the host-sync reference."""
+    rows = []
+    for prog in programs or COMPARE_PROGRAMS:
+        wl = get_workload(prog)
+        scale = wl.datasets[-1]
+        chunked, shared = wl.make_data(scale, np.random.default_rng(0))
+        runners = {name: StreamedRunner(wl, chunked, shared, backend=name)
+                   for name in list_backends(kind="runner")}
+        for cfg in COMPARE_CONFIGS:
+            base = runners["host-sync"].run(cfg, reps=reps)
+            for name, runner in runners.items():
+                t = base if name == "host-sync" else runner.run(cfg,
+                                                                reps=reps)
+                rows.append(
+                    f"backends.{prog}@{scale}.{cfg.partitions}x{cfg.tasks}"
+                    f".{name},{t*1e6:.0f},vs_sync={base/t:.3f}x")
+    return rows
 
 
 def dryrun_summary() -> list[str]:
@@ -59,7 +91,17 @@ def main() -> None:
     ap.add_argument("--datasets", type=int, default=3)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--compare-backends", action="store_true",
+                    help="A/B every runner backend; skips the paper figures")
     args = ap.parse_args()
+
+    if args.compare_backends:
+        print("name,us_per_call,derived")
+        for row in compare_backends(
+                args.programs.split(",") if args.programs else None,
+                reps=max(args.reps, 3)):
+            print(row)
+        return
 
     if args.programs:
         programs = args.programs.split(",")

@@ -7,10 +7,12 @@
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import time
+
 import numpy as np
 
 from repro.core import dataset as ds
-from repro.core.autotuner import AutoTuner
+from repro.core.autotuner import AutoTuner, TuningCache
 from repro.core.perf_model import PerformanceModel
 from repro.core.workloads import get_workload
 from repro.launch.train import train_loop
@@ -28,9 +30,31 @@ model = PerformanceModel.train(X, y, epochs=300)
 
 wl = get_workload("dotprod")  # never seen in training
 chunked, shared = wl.make_data(2048, np.random.default_rng(0))
-result = AutoTuner(model).tune(wl, chunked, shared)
+cache = TuningCache("/tmp/quickstart_tuning_cache.json")
+tuner = AutoTuner(model, cache=cache)
+t0 = time.perf_counter()
+result = tuner.tune(wl, chunked, shared)
+t_cold = time.perf_counter() - t0
 print(f"chosen stream config for dotprod: "
       f"(partitions={result.config.partitions}, tasks={result.config.tasks})")
 print(f"predicted speedup {result.predicted_speedup:.2f}x; "
       f"search took {result.search_seconds*1e3:.2f} ms "
       f"(feature extraction {result.feature_seconds*1e3:.0f} ms)")
+
+print("=== 3. warm-start from the persistent tuning cache ===")
+# a second request in the same shape bucket skips profiling entirely —
+# the serving-time deployment flow (save the cache, reload at startup)
+t1 = time.perf_counter()
+warm = tuner.tune(wl, chunked, shared)
+t_warm = time.perf_counter() - t1
+cache.save()
+if result.cached:
+    # the whole script warm-started from a previous run's persisted file
+    print(f"cache file from a previous run served both tunes in ~"
+          f"{t_warm*1e6:.0f} us (delete {cache.path} for a cold demo)")
+else:
+    print(f"warm hit: cached={warm.cached}, "
+          f"same config={warm.config == result.config}, "
+          f"{t_cold*1e3:.0f} ms cold -> {t_warm*1e6:.0f} us warm "
+          f"({t_cold/max(t_warm, 1e-9):.0f}x); "
+          f"cache persisted to {cache.path}")

@@ -1,0 +1,92 @@
+"""Executor-backend protocol: how a (partitions, tasks) stream config is
+realized on a concrete substrate.
+
+A backend receives an :class:`ExecutionContext` — the immutable per-run
+state (kernel, host data, device, jitted callables, resident shared
+buffers) — and a :class:`~repro.core.stream_config.StreamConfig`, and
+returns the list of per-slice outputs in deterministic (task-major,
+partition-minor) order.  That ordering contract is what makes every
+backend comparable against the single-stream reference: concatenating the
+outputs along axis 0 must reproduce the unsplit result for ``concat``
+workloads.
+
+Two backend kinds exist:
+  * ``runner``     — drives a chunkable data-parallel kernel
+                     (``dispatch`` is the entry point);
+  * ``train-step`` — rewrites a training step into a streamed equivalent
+                     (``wrap_train_step`` is the entry point).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def split_arrays(arrs: dict, n: int) -> list[dict]:
+    """Split every array in the dict into n chunks along axis 0."""
+    if n == 1:
+        return [arrs]
+    keys = list(arrs)
+    pieces = {k: np.array_split(arrs[k], n) for k in keys}
+    return [{k: pieces[k][i] for k in keys} for i in range(n)]
+
+
+@dataclasses.dataclass
+class ExecutionContext:
+    """Per-(workload, dataset) state shared by every runner backend."""
+
+    kernel: Callable
+    chunked: dict
+    shared: dict
+    device: Any
+    jit_kernel: Callable
+    shared_dev: Any
+    _donating_jit: Optional[Callable] = None
+
+    @classmethod
+    def create(cls, kernel: Callable, chunked: dict, shared: dict,
+               device=None) -> "ExecutionContext":
+        device = device or jax.devices()[0]
+        # buffer-validity tracking (paper §4.4.5): shared buffers are
+        # transferred once and stay resident across tasks and runs.
+        shared_dev = jax.device_put(shared, device)
+        jax.block_until_ready(shared_dev)
+        return cls(kernel=kernel, chunked=chunked, shared=shared,
+                   device=device, jit_kernel=jax.jit(kernel),
+                   shared_dev=shared_dev)
+
+    @property
+    def donating_jit(self) -> Callable:
+        """Kernel jitted with the chunk argument donated, so a finished
+        task's device buffers are recycled for its outputs (no-op on
+        backends without donation support, e.g. CPU)."""
+        if self._donating_jit is None:
+            self._donating_jit = jax.jit(self.kernel, donate_argnums=0)
+        return self._donating_jit
+
+
+class StreamBackend(abc.ABC):
+    """One realization of the streamed-execution strategy."""
+
+    #: unique registry key
+    name: str = ""
+    #: "runner" (chunkable kernels) or "train-step" (training loops)
+    kind: str = "runner"
+
+    def dispatch(self, ctx: ExecutionContext, config) -> list:
+        """Issue the full iteration space under ``config``; returns the
+        per-slice outputs (possibly still in flight — callers block)."""
+        raise NotImplementedError(f"{self.name} is not a runner backend")
+
+    def wrap_train_step(self, loss_fn: Callable, config, *,
+                        unroll: bool = True) -> Callable:
+        """Rewrite ``loss_fn(params, batch) -> (loss, aux)`` into a
+        streamed step function."""
+        raise NotImplementedError(f"{self.name} is not a train-step backend")
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<StreamBackend {self.name} ({self.kind})>"

@@ -1,0 +1,34 @@
+"""The synchronous host backend — the seed executor, unchanged semantics.
+
+Mirrors Figure 8c of the paper on a single host device:
+  * the outer iteration space is split into ``tasks`` chunks;
+  * each chunk's host->device transfer (``jax.device_put``) is issued
+    asynchronously and overlaps the (async-dispatched) compute of earlier
+    chunks — temporal sharing;
+  * each chunk's kernel is dispatched as ``partitions`` sub-slices, which
+    sets the kernel working-set granularity (cache blocking) and dispatch
+    parallelism — the spatial-sharing analogue on a host backend.
+
+The host loop runs ahead without bound: nothing caps how many tasks are
+in flight, and each task's buffers are fresh allocations.  The pipelined
+sibling (:mod:`repro.core.backends.host_pipelined`) fixes both.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.backends.base import ExecutionContext, StreamBackend, \
+    split_arrays
+
+
+class SyncHostBackend(StreamBackend):
+    name = "host-sync"
+    kind = "runner"
+
+    def dispatch(self, ctx: ExecutionContext, config) -> list:
+        outs = []
+        for task in split_arrays(ctx.chunked, config.tasks):
+            task_dev = jax.device_put(task, ctx.device)     # async H2D
+            for part in split_arrays(task_dev, config.partitions):
+                outs.append(ctx.jit_kernel(part, ctx.shared_dev))
+        return outs

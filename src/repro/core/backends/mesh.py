@@ -1,0 +1,79 @@
+"""Mesh backend — pod-scale temporal sharing via microbatched training.
+
+``wrap_train_step`` splits the global batch into ``config.tasks``
+microbatches with gradient accumulation, letting XLA's latency-hiding
+scheduler overlap the DP reduce-scatter of microbatch i with the backward
+of microbatch i+1 (the TPU-native analogue of the paper's
+transfer/compute overlap).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backends.base import StreamBackend
+
+
+class MeshBackend(StreamBackend):
+    name = "mesh"
+    kind = "train-step"
+
+    def wrap_train_step(self, loss_fn: Callable, config, *,
+                        unroll: bool = True) -> Callable:
+        """Wrap ``loss_fn(params, batch) -> (loss, metrics)`` into a
+        grad-accumulating step over ``config.tasks`` microbatches.
+
+        The value-and-grad of microbatch i+1 is independent of the
+        gradient all-reduce of microbatch i, so the XLA scheduler can
+        overlap collectives with compute.  ``unroll=True`` emits a python
+        loop (exact cost_analysis / better overlap freedom); False uses
+        lax.scan (small HLO).
+        """
+        n_micro = config.tasks
+
+        def grad_step(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        if n_micro == 1:
+            return grad_step
+
+        def microbatched(params, batch):
+            def reshape(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            mb = jax.tree.map(reshape, batch)
+
+            if unroll:
+                loss_sum = jnp.zeros((), jnp.float32)
+                grads_sum = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                metrics = None
+                for i in range(n_micro):
+                    micro = jax.tree.map(lambda x: x[i], mb)
+                    loss, metrics, grads = grad_step(params, micro)
+                    loss_sum = loss_sum + loss
+                    grads_sum = jax.tree.map(jnp.add, grads_sum, grads)
+                grads = jax.tree.map(lambda g: g / n_micro, grads_sum)
+                return loss_sum / n_micro, metrics, grads
+
+            def body(carry, micro):
+                loss_acc, grads_acc = carry
+                loss, metrics, grads = grad_step(params, micro)
+                grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
+                return (loss_acc + loss, grads_acc), metrics
+
+            zero_grads = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads_sum), metrics = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero_grads), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, grads_sum)
+            last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+            return loss_sum / n_micro, last_metrics, grads
+
+        return microbatched

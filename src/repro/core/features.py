@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.streams import StreamedRunner
 from repro.core.workloads import Workload
+from repro.core.xla_cost import cost_analysis_dict
 
 RAW_FEATURE_NAMES = [
     # --- static: iteration space / transfer structure (paper Table 1) ---
@@ -86,10 +87,7 @@ def extract_features(runner: StreamedRunner, *, profile: bool = True,
 
     lowered = runner.lowered_kernel()
     compiled = lowered.compile()
-    try:
-        cost = compiled.cost_analysis() or {}
-    except Exception:  # backend without cost analysis
-        cost = {}
+    cost = cost_analysis_dict(compiled)  # {} on backends without analysis
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0)) or float(dts)
 

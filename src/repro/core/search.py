@@ -30,7 +30,10 @@ def search_best(
     t0 = time.perf_counter()
     preds = model.predict_configs(prog_feats, candidates)
     dt = time.perf_counter() - t0
-    order = np.argsort(-preds)
+    # stable sort: prediction ties resolve to the earlier (cheaper)
+    # candidate, so repeated searches — and tuning-cache entries written
+    # from them — are deterministic for a fixed model.
+    order = np.argsort(-np.asarray(preds), kind="stable")
     picks = [candidates[i] for i in order[:top_k]]
     if top_k == 1:
         return picks[0], preds, dt

@@ -30,6 +30,15 @@ class StreamConfig:
     def as_tuple(self) -> tuple[int, int]:
         return (self.partitions, self.tasks)
 
+    # JSON forms used by the persistent tuning cache
+    def to_json(self) -> list[int]:
+        return [self.partitions, self.tasks]
+
+    @staticmethod
+    def from_json(d) -> "StreamConfig":
+        p, t = d
+        return StreamConfig(int(p), int(t))
+
 
 SINGLE_STREAM = StreamConfig(1, 1)
 

@@ -1,75 +1,62 @@
-"""The streamed executor — AUTOSTREAMER's runtime, as a JAX program
-transform (host backend) plus a mesh backend for pod-scale training.
+"""The streamed executor — AUTOSTREAMER's runtime.
 
-Host backend (CPU reproduction; mirrors Figure 8c of the paper):
-  * the outer iteration space is split into ``tasks`` chunks;
-  * each chunk's host->device transfer (``jax.device_put``) is issued
-    asynchronously and overlaps the (async-dispatched) compute of earlier
-    chunks — temporal sharing;
-  * each chunk's kernel is dispatched as ``partitions`` sub-slices, which
-    sets the kernel working-set granularity (cache blocking) and dispatch
-    parallelism — the spatial-sharing analogue on a host backend;
-  * shared (non-chunked) buffers are transferred once and tracked valid —
-    the paper's buffer-validity optimization (§4.4.5);
-  * results are read back after all dispatches (D2H of early chunks
-    overlaps compute of late chunks).
+The execution strategies themselves live in :mod:`repro.core.backends`
+(``host-sync``, ``host-pipelined``, ``mesh``, plus anything registered at
+runtime).  This module keeps the user-facing runner: one object per
+(workload, dataset) pair that can execute, time, and profile arbitrary
+stream configs on any registered runner backend.
 
-Mesh backend (pod scale): ``streamify_train_step`` splits the global batch
-into ``tasks`` microbatches with gradient accumulation, letting XLA's
-latency-hiding scheduler overlap the DP reduce-scatter of microbatch i with
-the backward of microbatch i+1.
+``streamify_train_step`` is the train-step face of the same idea and
+delegates to the ``mesh`` backend.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, Optional
+from typing import Callable, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.core.backends import (StreamBackend, ExecutionContext,
+                                 get_backend, split_arrays)
 from repro.core.stream_config import SINGLE_STREAM, StreamConfig
 from repro.core.workloads import Workload
 
-
-# ---------------------------------------------------------------------------
-# Host backend
-# ---------------------------------------------------------------------------
-
-
-def _split(arrs: dict, n: int) -> list[dict]:
-    """Split every array in the dict into n chunks along axis 0."""
-    if n == 1:
-        return [arrs]
-    keys = list(arrs)
-    pieces = {k: np.array_split(arrs[k], n) for k in keys}
-    return [{k: pieces[k][i] for k in keys} for i in range(n)]
+# back-compat alias: tests and older callers import the splitter from here
+_split = split_arrays
 
 
 class StreamedRunner:
-    """Executes one workload+dataset under arbitrary stream configs."""
+    """Executes one workload+dataset under arbitrary stream configs.
+
+    ``backend`` picks the execution strategy by registry name (or a
+    :class:`StreamBackend` instance); every runner backend produces
+    outputs in the same task-major order, allclose to the single-stream
+    reference.
+    """
 
     def __init__(self, wl: Workload, chunked: dict, shared: dict,
-                 device=None):
+                 device=None, backend: Union[str, StreamBackend] = "host-sync"):
         self.wl = wl
         self.chunked = chunked
         self.shared = shared
-        self.device = device or jax.devices()[0]
-        self._jit = jax.jit(wl.kernel)
-        # buffer-validity tracking: shared buffers live on device across
-        # tasks and across runs (transferred once).
-        self._shared_dev = jax.device_put(shared, self.device)
-        jax.block_until_ready(self._shared_dev)
+        self.backend = (get_backend(backend) if isinstance(backend, str)
+                        else backend)
+        if self.backend.kind != "runner":
+            raise ValueError(
+                f"backend {self.backend.name!r} is a {self.backend.kind} "
+                f"backend, not a runner")
+        self.ctx = ExecutionContext.create(wl.kernel, chunked, shared,
+                                           device)
+        self.device = self.ctx.device
+        # legacy attribute names, still used by feature extraction
+        self._jit = self.ctx.jit_kernel
+        self._shared_dev = self.ctx.shared_dev
 
     # -- execution -----------------------------------------------------------
 
     def _dispatch(self, config: StreamConfig):
-        outs = []
-        for task in _split(self.chunked, config.tasks):
-            task_dev = jax.device_put(task, self.device)     # async H2D
-            for part in _split(task_dev, config.partitions):
-                outs.append(self._jit(part, self._shared_dev))
-        return outs
+        return self.backend.dispatch(self.ctx, config)
 
     def warmup(self, config: StreamConfig) -> None:
         """Compile every sub-slice shape before timing."""
@@ -138,69 +125,13 @@ def profile_config_grid(runner: StreamedRunner, configs, *, reps: int = 3,
     return out
 
 
-# ---------------------------------------------------------------------------
-# Mesh backend — microbatched training step (pod-scale temporal sharing)
-# ---------------------------------------------------------------------------
-
-
 def streamify_train_step(
     loss_fn: Callable,
     config: StreamConfig,
     *,
     unroll: bool = True,
 ) -> Callable:
-    """Wrap ``loss_fn(params, batch) -> (loss, metrics)`` into a
-    grad-accumulating step over ``config.tasks`` microbatches.
-
-    The value-and-grad of microbatch i+1 is independent of the gradient
-    all-reduce of microbatch i, so the XLA scheduler can overlap collectives
-    with compute — the pod-scale temporal-sharing analogue.  ``unroll=True``
-    emits a python loop (exact cost_analysis / better overlap freedom);
-    False uses lax.scan (small HLO).
-    """
-    n_micro = config.tasks
-
-    def grad_step(params, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params, batch)
-        return loss, metrics, grads
-
-    if n_micro == 1:
-        return grad_step
-
-    def microbatched(params, batch):
-        def reshape(x):
-            b = x.shape[0]
-            assert b % n_micro == 0, (b, n_micro)
-            return x.reshape(n_micro, b // n_micro, *x.shape[1:])
-
-        mb = jax.tree.map(reshape, batch)
-
-        if unroll:
-            loss_sum = jnp.zeros((), jnp.float32)
-            grads_sum = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            metrics = None
-            for i in range(n_micro):
-                micro = jax.tree.map(lambda x: x[i], mb)
-                loss, metrics, grads = grad_step(params, micro)
-                loss_sum = loss_sum + loss
-                grads_sum = jax.tree.map(jnp.add, grads_sum, grads)
-            grads = jax.tree.map(lambda g: g / n_micro, grads_sum)
-            return loss_sum / n_micro, metrics, grads
-
-        def body(carry, micro):
-            loss_acc, grads_acc = carry
-            loss, metrics, grads = grad_step(params, micro)
-            grads_acc = jax.tree.map(jnp.add, grads_acc, grads)
-            return (loss_acc + loss, grads_acc), metrics
-
-        zero_grads = jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), params)
-        (loss_sum, grads_sum), metrics = jax.lax.scan(
-            body, (jnp.zeros((), jnp.float32), zero_grads), mb)
-        grads = jax.tree.map(lambda g: g / n_micro, grads_sum)
-        last_metrics = jax.tree.map(lambda m: m[-1], metrics)
-        return loss_sum / n_micro, last_metrics, grads
-
-    return microbatched
+    """Microbatched grad-accumulation step — see
+    :meth:`repro.core.backends.mesh.MeshBackend.wrap_train_step`."""
+    return get_backend("mesh").wrap_train_step(loss_fn, config,
+                                               unroll=unroll)

@@ -1,0 +1,27 @@
+"""Version-tolerant access to XLA's ``compiled.cost_analysis()``.
+
+Across jax releases the return type has flipped between a dict and a
+list-of-dicts (one per computation, entry 0 = the entry computation).
+Every consumer in this repo goes through :func:`cost_analysis_dict` so the
+difference is absorbed in exactly one place.
+"""
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Return the entry-computation cost analysis as a plain dict.
+
+    Returns ``{}`` when the backend has no cost analysis at all — callers
+    fall back to their own estimates in that case.
+    """
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    if not isinstance(cost, dict):
+        return {}
+    return dict(cost)

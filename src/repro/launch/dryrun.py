@@ -26,6 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import SHAPES, ArchConfig, InputShape, get_arch, list_archs
 from repro.core.stream_config import StreamConfig
 from repro.core.streams import streamify_train_step
+from repro.core.xla_cost import cost_analysis_dict
 from repro.launch.mesh import dp_axes_of, make_production_mesh
 from repro.models import transformer
 from repro.models.model_zoo import Model
@@ -267,7 +268,7 @@ def run_cell(arch: str, shape_name: str, opts: DryRunOptions,
         record["roofline"]["bytes_raw_per_chip"] = jc.bytes / mesh.size
         record["roofline"]["memory_raw_s"] = jc.bytes / mesh.size / HBM_BW
         # XLA's own (loop-body-once) numbers kept for reference
-        cost = compiled.cost_analysis() or {}
+        cost = cost_analysis_dict(compiled)
         record["xla_cost_analysis"] = {
             k: float(v) for k, v in cost.items()
             if isinstance(v, (int, float)) and k in

@@ -20,6 +20,8 @@ import dataclasses
 import re
 from typing import Optional
 
+from repro.core.xla_cost import cost_analysis_dict
+
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip
 ICI_BW = 50e9                # bytes/s per link
@@ -243,7 +245,7 @@ class RooflineTerms:
 def roofline_from_compiled(compiled, *, n_chips: int,
                            model_flops: float = 0.0,
                            hlo_text: Optional[str] = None) -> RooflineTerms:
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     flops = float(cost.get("flops", 0.0))
     byts = float(cost.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()

@@ -1,0 +1,145 @@
+"""Executor-backend subsystem: registry semantics and the equivalence
+contract — every registered runner backend, on every config in a small
+grid, must reproduce the single-stream host reference."""
+import numpy as np
+import pytest
+
+from repro.core.backends import (REFERENCE_BACKEND, MeshBackend,
+                                 StreamBackend, get_backend, list_backends,
+                                 register_backend, split_arrays)
+from repro.core.stream_config import SINGLE_STREAM, StreamConfig
+from repro.core.streams import StreamedRunner
+from repro.core.workloads import get_workload
+
+# one shared-buffer-free, one shared-matrix, one shared-vector workload
+EQUIV_WORKLOADS = ["vecadd", "sgemm", "mvmult"]
+EQUIV_CONFIGS = [SINGLE_STREAM, StreamConfig(1, 4), StreamConfig(2, 2),
+                 StreamConfig(4, 8)]
+
+
+def _concat_outputs(runner, config):
+    return np.concatenate(
+        [np.asarray(o) for o in runner._dispatch(config)], axis=0)
+
+
+@pytest.fixture(scope="module")
+def references():
+    """Single-stream reference outputs per workload, on the reference
+    backend."""
+    refs = {}
+    for name in EQUIV_WORKLOADS:
+        wl = get_workload(name)
+        rng = np.random.default_rng(0)
+        chunked, shared = wl.make_data(wl.datasets[0], rng)
+        runner = StreamedRunner(wl, chunked, shared,
+                                backend=REFERENCE_BACKEND)
+        refs[name] = (chunked, shared, _concat_outputs(runner, SINGLE_STREAM))
+    return refs
+
+
+@pytest.mark.parametrize("backend", list_backends(kind="runner"))
+@pytest.mark.parametrize("name", EQUIV_WORKLOADS)
+def test_backend_matches_single_stream_reference(backend, name, references):
+    chunked, shared, ref = references[name]
+    wl = get_workload(name)
+    runner = StreamedRunner(wl, chunked, shared, backend=backend)
+    for cfg in EQUIV_CONFIGS:
+        got = _concat_outputs(runner, cfg)
+        # different chunk shapes change XLA's reduction order slightly
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-3,
+                                   err_msg=f"{backend} {name} {cfg}")
+
+
+@pytest.mark.parametrize("backend", list_backends(kind="runner"))
+def test_backend_output_count_and_timing(backend):
+    wl = get_workload("vecadd")
+    rng = np.random.default_rng(1)
+    chunked, shared = wl.make_data(256, rng)
+    runner = StreamedRunner(wl, chunked, shared, backend=backend)
+    cfg = StreamConfig(2, 4)
+    assert len(runner._dispatch(cfg)) == cfg.partitions * cfg.tasks
+    t = runner.run(cfg, reps=1)
+    assert 0 < t < 10.0
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_registry_contents():
+    assert set(list_backends(kind="runner")) >= {"host-sync",
+                                                 "host-pipelined"}
+    assert list_backends(kind="train-step") == ["mesh"]
+    assert list_backends() == sorted(list_backends())
+    assert get_backend("host-sync").kind == "runner"
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("no-such-backend")
+    with pytest.raises(KeyError):
+        StreamedRunner(get_workload("vecadd"), {"a": np.zeros((4, 2))},
+                       {}, backend="no-such-backend")
+
+
+def test_duplicate_registration_rejected():
+    class Dup(StreamBackend):
+        name = "host-sync"
+
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(Dup())
+
+
+def test_runner_rejects_train_step_backend():
+    wl = get_workload("vecadd")
+    rng = np.random.default_rng(2)
+    chunked, shared = wl.make_data(256, rng)
+    with pytest.raises(ValueError, match="not a runner"):
+        StreamedRunner(wl, chunked, shared, backend="mesh")
+
+
+def test_mesh_backend_is_not_a_runner():
+    with pytest.raises(NotImplementedError):
+        MeshBackend().dispatch(None, SINGLE_STREAM)
+
+
+def test_split_arrays_roundtrip():
+    arrs = {"a": np.arange(12).reshape(12, 1)}
+    parts = split_arrays(arrs, 4)
+    assert len(parts) == 4
+    np.testing.assert_array_equal(
+        np.concatenate([p["a"] for p in parts]), arrs["a"])
+
+
+def test_custom_backend_pluggable():
+    """A third-party backend registers, runs, and matches the reference."""
+
+    class ReversedTasksBackend(StreamBackend):
+        # dispatches tasks in reverse but returns outputs in task order —
+        # exercises that only output ORDER is part of the contract
+        name = "test-reversed"
+        kind = "runner"
+
+        def dispatch(self, ctx, config):
+            import jax
+            tasks = split_arrays(ctx.chunked, config.tasks)
+            outs = [None] * len(tasks)
+            for i in reversed(range(len(tasks))):
+                dev = jax.device_put(tasks[i], ctx.device)
+                outs[i] = [ctx.jit_kernel(p, ctx.shared_dev)
+                           for p in split_arrays(dev, config.partitions)]
+            return [o for task in outs for o in task]
+
+    try:
+        register_backend(ReversedTasksBackend())
+        wl = get_workload("vecadd")
+        rng = np.random.default_rng(3)
+        chunked, shared = wl.make_data(256, rng)
+        ref = _concat_outputs(
+            StreamedRunner(wl, chunked, shared), SINGLE_STREAM)
+        runner = StreamedRunner(wl, chunked, shared,
+                                backend="test-reversed")
+        got = _concat_outputs(runner, StreamConfig(2, 4))
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-3)
+    finally:
+        from repro.core import backends as bk
+        bk._BACKENDS.pop("test-reversed", None)

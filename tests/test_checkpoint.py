@@ -57,6 +57,7 @@ def test_async_save(tmp_path):
     assert ck.latest_step() == 11
 
 
+@pytest.mark.slow
 def test_auto_resume_training(tmp_path):
     from repro.launch.train import train_loop
     r1 = train_loop("stablelm-3b", steps=6, batch=2, seq=8,

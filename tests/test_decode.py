@@ -20,9 +20,14 @@ def _grow_attn_cache(cache, extra):
 
 
 @pytest.mark.parametrize("arch", [
-    "yi-9b", "codeqwen1.5-7b", "starcoder2-15b",
-    "jamba-1.5-large-398b", "xlstm-350m", "grok-1-314b",
-    "pixtral-12b", "musicgen-medium",
+    pytest.param("yi-9b", marks=pytest.mark.slow),
+    pytest.param("codeqwen1.5-7b", marks=pytest.mark.slow),
+    "starcoder2-15b",
+    pytest.param("jamba-1.5-large-398b", marks=pytest.mark.slow),
+    "xlstm-350m",
+    pytest.param("grok-1-314b", marks=pytest.mark.slow),
+    "pixtral-12b",
+    pytest.param("musicgen-medium", marks=pytest.mark.slow),
 ])
 def test_decode_matches_full_forward(arch):
     # capacity_factor high so MoE routing has no train/decode drop skew

@@ -23,6 +23,7 @@ def _run(snippet: str, n_dev: int = 8) -> str:
     return r.stdout
 
 
+@pytest.mark.slow
 def test_sharded_decode_matches_local():
     out = _run("""
 import jax, jax.numpy as jnp
@@ -48,6 +49,7 @@ print("OK sharded-decode")
     assert "OK sharded-decode" in out
 
 
+@pytest.mark.slow
 def test_compressed_psum_close_to_exact():
     out = _run("""
 import jax, jax.numpy as jnp, numpy as np

@@ -46,6 +46,7 @@ def test_pipeline_shapes_and_pruning():
     np.testing.assert_allclose(pipe.inverse_y(yn), y, rtol=1e-6)
 
 
+@pytest.mark.slow
 def test_mlp_learns_synthetic_speedups():
     X, y = _synthetic()
     m = PerformanceModel.train(X, y, epochs=500)
@@ -54,6 +55,7 @@ def test_mlp_learns_synthetic_speedups():
     assert mse < 0.05, mse
 
 
+@pytest.mark.slow
 def test_model_ranks_configs_sensibly():
     X, y = _synthetic()
     m = PerformanceModel.train(X, y, epochs=500)

@@ -1,8 +1,15 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+hypothesis is an optional test dependency (see README); the module is
+skipped cleanly when it is absent so collection never fails.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.checkpoint.checkpointer import _flatten, _unflatten
 from repro.core.features import config_features

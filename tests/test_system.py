@@ -17,6 +17,7 @@ from repro.launch.serve import serve
 from repro.launch.train import train_loop
 
 
+@pytest.mark.slow
 def test_training_loss_goes_down():
     res = train_loop("stablelm-3b", steps=25, batch=4, seq=16,
                      verbose=False, lr=3e-3)
@@ -26,6 +27,7 @@ def test_training_loss_goes_down():
     assert last < first, (first, last)
 
 
+@pytest.mark.slow
 def test_training_with_microbatches_matches_shapes():
     res = train_loop("yi-9b", steps=6, batch=8, seq=16, microbatches=4,
                      verbose=False)
@@ -51,7 +53,9 @@ def test_serving_greedy_deterministic():
 
 
 # --------------------------------------------------------------------------
-# The paper's pipeline end-to-end (small live profile)
+# The paper's pipeline end-to-end (small live profile) — slow tier: the
+# fixture exhaustively profiles 8 (program, dataset) cells.  The fast tier
+# covers the same path via test_backends.py / test_tuning_cache.py.
 # --------------------------------------------------------------------------
 
 
@@ -63,6 +67,7 @@ def mini_samples(tmp_path_factory):
                        cache_path=cache, verbose=False)
 
 
+@pytest.mark.slow
 def test_pipeline_profiles_and_caches(mini_samples):
     assert len(mini_samples) == 8
     for s in mini_samples:
@@ -71,6 +76,7 @@ def test_pipeline_profiles_and_caches(mini_samples):
         assert s.times[(1, 1)] > 0
 
 
+@pytest.mark.slow
 def test_model_trained_on_profiles_beats_worst_config(mini_samples):
     X, y = ds.training_matrix(mini_samples)
     model = PerformanceModel.train(X, y, epochs=300)
@@ -83,6 +89,7 @@ def test_model_trained_on_profiles_beats_worst_config(mini_samples):
     assert dt < 1.0  # search overhead: the paper's "few milliseconds"
 
 
+@pytest.mark.slow
 def test_autotuner_end_to_end(mini_samples):
     X, y = ds.training_matrix(mini_samples)
     model = PerformanceModel.train(X, y, epochs=200)
@@ -95,12 +102,14 @@ def test_autotuner_end_to_end(mini_samples):
     assert result.search_seconds < 1.0
 
 
+@pytest.mark.slow
 def test_loo_split_excludes_family(mini_samples):
     train, test = ds.loo_split(mini_samples, "vecadd")
     assert all(s.program != "vecadd" for s in train)
     assert all(s.program == "vecadd" for s in test)
 
 
+@pytest.mark.slow
 def test_simulated_annealing_on_measured_objective():
     wl = get_workload("vecadd")
     rng = np.random.default_rng(0)

@@ -1,0 +1,205 @@
+"""Persistent tuning cache: hit/miss semantics, shape bucketing, JSON
+round-trip, and the warm-path speedup contract."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.autotuner import (AutoTuner, TuneResult, TuningCache,
+                                  data_signature, shape_bucket)
+from repro.core.stream_config import StreamConfig
+from repro.core.workloads import get_workload
+
+
+class _StubModel:
+    """Deterministic stand-in for the trained MLP: prefers tasks=4."""
+
+    def predict_configs(self, feats, candidates):
+        return np.array([1.0 / (1.0 + abs(c.tasks - 4)) - 0.01 * c.partitions
+                         for c in candidates])
+
+
+def _data(name="vecadd", rows=256, seed=0):
+    wl = get_workload(name)
+    chunked, shared = wl.make_data(rows, np.random.default_rng(seed))
+    return wl, chunked, shared
+
+
+def test_shape_bucket():
+    assert shape_bucket(1) == 1
+    assert shape_bucket(2) == 2
+    assert shape_bucket(3) == 4
+    assert shape_bucket(100) == 128
+    assert shape_bucket(128) == 128
+    assert shape_bucket(129) == 256
+
+
+def test_miss_then_hit_same_config(tmp_path):
+    wl, chunked, shared = _data()
+    cache = TuningCache()
+    tuner = AutoTuner(_StubModel(), cache=cache)
+    cold = tuner.tune(wl, chunked, shared)
+    assert not cold.cached
+    assert cache.misses == 1 and cache.hits == 0
+    warm = tuner.tune(wl, chunked, shared)
+    assert warm.cached
+    assert cache.hits == 1
+    assert warm.config == cold.config
+    assert warm.predicted_speedup == cold.predicted_speedup
+
+
+def test_same_bucket_shares_entry():
+    """Two batches whose leading dims round to the same power of two hit
+    one cache entry; a different bucket misses."""
+    wl = get_workload("vecadd")
+    rng = np.random.default_rng(0)
+    c100, s100 = wl.make_data(100, rng)
+    c120, s120 = wl.make_data(120, rng)   # bucket 128, same as 100
+    c300, s300 = wl.make_data(300, rng)   # bucket 512
+    k100 = TuningCache.key(wl.name, c100, s100, "host-sync")
+    k120 = TuningCache.key(wl.name, c120, s120, "host-sync")
+    k300 = TuningCache.key(wl.name, c300, s300, "host-sync")
+    assert k100 == k120
+    assert k100 != k300
+
+    cache = TuningCache()
+    tuner = AutoTuner(_StubModel(), cache=cache)
+    tuner.tune(wl, c100, s100)
+    warm = tuner.tune(wl, c120, s120)
+    assert warm.cached
+    assert not tuner.tune(wl, c300, s300).cached
+
+
+def test_hit_invalid_for_smaller_batch_retunes():
+    """A config tuned on a big batch may not be splittable for a smaller
+    batch in the same bucket — the hit must be rejected and re-tuned."""
+
+    class _MaxSplitModel:
+        # always prefers the largest partitions*tasks product offered
+        def predict_configs(self, feats, candidates):
+            return np.array([float(c.partitions * c.tasks)
+                             for c in candidates])
+
+    wl = get_workload("vecadd")
+    rng = np.random.default_rng(0)
+    c2048, s2048 = wl.make_data(2048, rng)
+    c1056, s1056 = wl.make_data(1056, rng)   # same bucket (2048)
+    assert (TuningCache.key(wl.name, c2048, s2048, "host-sync")
+            == TuningCache.key(wl.name, c1056, s1056, "host-sync"))
+
+    cache = TuningCache()
+    tuner = AutoTuner(_MaxSplitModel(), cache=cache)
+    big = tuner.tune(wl, c2048, s2048)
+    assert big.config.partitions * big.config.tasks == 2048
+    small = tuner.tune(wl, c1056, s1056)     # hit is unsplittable -> retune
+    assert not small.cached
+    assert small.config.partitions * small.config.tasks <= 1056
+    # the entry now holds the conservative config; both sizes can hit it
+    assert tuner.tune(wl, c2048, s2048).cached
+    assert tuner.tune(wl, c1056, s1056).cached
+
+
+def test_key_separates_workload_backend_and_model_tag():
+    wl, chunked, shared = _data()
+    k_sync = TuningCache.key(wl.name, chunked, shared, "host-sync")
+    k_pipe = TuningCache.key(wl.name, chunked, shared, "host-pipelined")
+    k_other = TuningCache.key("sgemm", chunked, shared, "host-sync")
+    k_v2 = TuningCache.key(wl.name, chunked, shared, "host-sync",
+                           model_tag="v2")
+    assert len({k_sync, k_pipe, k_other, k_v2}) == 4
+
+
+def test_explicit_runner_backend_wins():
+    """tune(runner=...) caches under the runner's backend, not the
+    tuner's default."""
+    from repro.core.streams import StreamedRunner
+    wl, chunked, shared = _data()
+    cache = TuningCache()
+    tuner = AutoTuner(_StubModel(), cache=cache)  # default host-sync
+    runner = StreamedRunner(wl, chunked, shared, backend="host-pipelined")
+    result = tuner.tune(wl, chunked, shared, runner=runner)
+    assert result.backend == "host-pipelined"
+    # a plain host-sync tune must NOT warm-hit the pipelined entry
+    assert not tuner.tune(wl, chunked, shared).cached
+
+
+def test_rejected_hit_counts_as_miss():
+    wl, chunked, shared = _data()
+    cache = TuningCache()
+    tuner = AutoTuner(_StubModel(), cache=cache)
+    tuner.tune(wl, chunked, shared)
+    cache.get(cache.key(wl.name, chunked, shared, "host-sync"),
+              valid=lambda r: False)
+    assert cache.hits == 0 and cache.misses == 2
+
+
+def test_signature_covers_shared_and_dtype():
+    wl, chunked, shared = _data("mvmult", rows=128)
+    sig = data_signature(chunked, shared)
+    assert "float32" in sig and "v" in sig and "A" in sig
+    # inner dims exact, leading dim bucketed
+    assert "768" in sig
+
+
+def test_json_roundtrip_restores_identical_results(tmp_path):
+    wl, chunked, shared = _data()
+    path = str(tmp_path / "cache.json")
+    cache = TuningCache(path)
+    tuner = AutoTuner(_StubModel(), cache=cache)
+    cold = tuner.tune(wl, chunked, shared)
+    cache.save()
+
+    restored = TuningCache(path)            # load happens in __init__
+    assert len(restored) == len(cache) == 1
+    tuner2 = AutoTuner(_StubModel(), cache=restored)
+    warm = tuner2.tune(wl, chunked, shared)
+    assert warm.cached
+    assert warm.config == cold.config
+    assert warm.predicted_speedup == pytest.approx(cold.predicted_speedup)
+    assert warm.backend == cold.backend
+
+
+def test_corrupt_cache_file_degrades_to_cold_start(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("{not json")
+    with pytest.warns(UserWarning, match="unreadable tuning cache"):
+        cache = TuningCache(str(path))
+    assert len(cache) == 0
+    with pytest.raises(Exception):
+        cache.load(str(path))  # explicit load still surfaces the error
+
+
+def test_tuneresult_json_roundtrip():
+    r = TuneResult(StreamConfig(3, 24), 1.75, 0.2, 0.001,
+                   backend="host-pipelined")
+    back = TuneResult.from_json(r.to_json())
+    assert back == r
+
+
+def test_warm_hit_is_100x_faster_and_same_config():
+    # a (workload, scale) no other test compiles, so the cold path pays
+    # real compile + profile cost the way a fresh serving process would
+    wl, chunked, shared = _data("fwt", rows=512, seed=7)
+    cache = TuningCache()
+    tuner = AutoTuner(_StubModel(), cache=cache)
+    t0 = time.perf_counter()
+    cold = tuner.tune(wl, chunked, shared)
+    t_cold = time.perf_counter() - t0
+    t_warm = float("inf")
+    for _ in range(5):
+        t1 = time.perf_counter()
+        warm = tuner.tune(wl, chunked, shared)
+        t_warm = min(t_warm, time.perf_counter() - t1)
+    assert warm.config == cold.config
+    # cold path compiles + profiles the workload; warm is a dict lookup
+    assert t_warm < t_cold / 100, (t_cold, t_warm)
+
+
+def test_uncached_tuner_unchanged():
+    """Without a cache the tuner behaves exactly as before."""
+    wl, chunked, shared = _data()
+    tuner = AutoTuner(_StubModel())
+    r1 = tuner.tune(wl, chunked, shared)
+    r2 = tuner.tune(wl, chunked, shared)
+    assert not r1.cached and not r2.cached
+    assert r1.config == r2.config  # deterministic stub + stable search
