@@ -1,9 +1,24 @@
-"""Batched serving demo: prefill + KV-cached greedy decode over batched
-request slots, for a dense LM and for the recurrent xLSTM (O(1) state).
+"""Serving demos.
+
+Part 1 — batched LM serving: prefill + KV-cached greedy decode over
+batched request slots, for a dense LM and for the recurrent xLSTM
+(O(1) state).
+
+Part 2 — the TuningCache warm-start flow (the serving deployment story):
+the first tune of a (workload, shape-bucket) profiles and searches; every
+later request in the same bucket is a cache hit that skips both.  Prints
+cold vs. warm tuning latency side by side.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
+import time
+
+import numpy as np
+
+from repro.core.autotuner import AutoTuner, TuningCache
+from repro.core.workloads import get_workload
 from repro.launch.serve import serve
+from repro.serving import OverlapHeuristicModel
 
 for arch in ("yi-9b", "xlstm-350m"):
     print(f"=== serving {arch} (reduced config) ===")
@@ -11,3 +26,25 @@ for arch in ("yi-9b", "xlstm-350m"):
                 gen_len=8, verbose=True)
     print(f"{res.tokens_generated} tokens in {res.wall_s:.2f}s "
           f"({res.tokens_per_s:.0f} tok/s)\n")
+
+print("=== TuningCache warm-start (cold vs warm tuning latency) ===")
+cache = TuningCache()                     # pass a path to persist across boots
+tuner = AutoTuner(OverlapHeuristicModel(), cache=cache)
+rng = np.random.default_rng(0)
+for name in ("vecadd", "dotprod", "mvmult"):
+    wl = get_workload(name)
+    chunked, shared = wl.make_data(wl.datasets[1], rng)
+    t0 = time.perf_counter()
+    cold = tuner.tune(wl, chunked, shared)
+    t_cold = time.perf_counter() - t0
+    # same shape bucket, fresh data — the serving steady state
+    chunked2, shared2 = wl.make_data(wl.datasets[1], rng)
+    t0 = time.perf_counter()
+    warm = tuner.tune(wl, chunked2, shared2)
+    t_warm = time.perf_counter() - t0
+    assert warm.cached and warm.config == cold.config
+    print(f"{name:10s} config={cold.config.partitions}x{cold.config.tasks}"
+          f"  cold={t_cold*1e3:8.2f}ms  warm={t_warm*1e6:6.1f}us"
+          f"  ({t_cold/max(t_warm, 1e-9):7.0f}x faster)")
+print(f"cache: {cache.hits} hits / {cache.misses} misses "
+      f"({len(cache)} entries)")

@@ -41,6 +41,10 @@ class TuneResult:
     search_seconds: float
     backend: str = "host-sync"
     cached: bool = False
+    #: provenance: "model" = ranked by the performance model;
+    #: "refined" = re-profiled by the serving drift-refinement loop, so
+    #: predicted_speedup is a *measured* speedup, not a model output
+    source: str = "model"
 
     def to_json(self) -> dict:
         return {
@@ -49,6 +53,7 @@ class TuneResult:
             "feature_seconds": self.feature_seconds,
             "search_seconds": self.search_seconds,
             "backend": self.backend,
+            "source": self.source,
         }
 
     @staticmethod
@@ -59,6 +64,7 @@ class TuneResult:
             feature_seconds=float(d["feature_seconds"]),
             search_seconds=float(d["search_seconds"]),
             backend=d.get("backend", "host-sync"),
+            source=d.get("source", "model"),
         )
 
 
@@ -140,6 +146,11 @@ class TuningCache:
     def put(self, key: str, result: TuneResult) -> None:
         self._entries[key] = result
 
+    def invalidate(self, key: str) -> Optional[TuneResult]:
+        """Drop an entry (drift refinement evicts before re-profiling so a
+        concurrent reader re-tunes rather than serving the stale config)."""
+        return self._entries.pop(key, None)
+
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: Optional[str] = None) -> str:
@@ -195,8 +206,10 @@ class AutoTuner:
                                           backend=backend)
         feats = feat_lib.extract_features(runner, profile_reps=1)
         t_feat = time.perf_counter() - t0
+        # guard: an empty filtered list would make search_best fall back
+        # to the FULL default grid and return an unsplittable config
         cands = [c for c in self.candidates
-                 if c.partitions * c.tasks <= n_rows]
+                 if c.partitions * c.tasks <= n_rows] or [StreamConfig(1, 1)]
         best, preds, t_search = search_best(self.model, feats.values, cands)
         result = TuneResult(best, float(np.max(preds)), t_feat, t_search,
                             backend=backend)

@@ -11,6 +11,8 @@ Built-ins:
   ``host-sync``      — the synchronous reference executor (seed behavior)
   ``host-pipelined`` — depth-2 double-buffered pipeline with host-side
                        partition slicing and buffer donation
+  ``host-threads``   — thread-pool task issue with a bounded in-flight
+                       window (host-side analogue of multiple HW queues)
   ``mesh``           — pod-scale microbatched training step
 
 Adding a backend::
@@ -26,9 +28,10 @@ Adding a backend::
 from __future__ import annotations
 
 from repro.core.backends.base import (ExecutionContext, StreamBackend,
-                                      split_arrays)
+                                      memoized_jit, split_arrays)
 from repro.core.backends.host_pipelined import PipelinedHostBackend
 from repro.core.backends.host_sync import SyncHostBackend
+from repro.core.backends.host_threads import ThreadedHostBackend
 from repro.core.backends.mesh import MeshBackend
 
 _BACKENDS: dict[str, StreamBackend] = {}
@@ -67,11 +70,13 @@ def list_backends(kind: str | None = None) -> list[str]:
 
 register_backend(SyncHostBackend())
 register_backend(PipelinedHostBackend())
+register_backend(ThreadedHostBackend())
 register_backend(MeshBackend())
 
 __all__ = [
-    "ExecutionContext", "StreamBackend", "split_arrays",
-    "SyncHostBackend", "PipelinedHostBackend", "MeshBackend",
+    "ExecutionContext", "StreamBackend", "memoized_jit", "split_arrays",
+    "SyncHostBackend", "PipelinedHostBackend", "ThreadedHostBackend",
+    "MeshBackend",
     "register_backend", "get_backend", "list_backends",
     "REFERENCE_BACKEND",
 ]

@@ -25,6 +25,36 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+# Process-wide jit memo: serving creates one ExecutionContext per request,
+# and a fresh ``jax.jit(kernel)`` wrapper per request would recompile every
+# shape it has already seen.  Workload kernels are module-level callables
+# with stable identity, so memoizing the wrapper by kernel shares the trace
+# cache across contexts (and across requests for the whole process).
+# Bounded with FIFO eviction: a jitted wrapper strongly references its
+# kernel, so a weak-keyed map would never collect entries anyway, and
+# callers jitting dynamically created closures must not grow the memo (and
+# every compiled executable behind it) without bound.
+_JIT_MEMO: dict = {}
+_JIT_MEMO_MAX = 256
+
+
+def memoized_jit(kernel: Callable, *, donate: bool = False) -> Callable:
+    """``jax.jit(kernel)`` with the wrapper shared across ExecutionContexts."""
+    try:
+        entry = _JIT_MEMO.get(kernel)
+    except TypeError:          # unhashable callable: no memoization
+        return (jax.jit(kernel, donate_argnums=0) if donate
+                else jax.jit(kernel))
+    if entry is None:
+        while len(_JIT_MEMO) >= _JIT_MEMO_MAX:
+            _JIT_MEMO.pop(next(iter(_JIT_MEMO)))
+        entry = _JIT_MEMO[kernel] = {}
+    key = "donate" if donate else "plain"
+    if key not in entry:
+        entry[key] = (jax.jit(kernel, donate_argnums=0) if donate
+                      else jax.jit(kernel))
+    return entry[key]
+
 
 def split_arrays(arrs: dict, n: int) -> list[dict]:
     """Split every array in the dict into n chunks along axis 0."""
@@ -56,7 +86,7 @@ class ExecutionContext:
         shared_dev = jax.device_put(shared, device)
         jax.block_until_ready(shared_dev)
         return cls(kernel=kernel, chunked=chunked, shared=shared,
-                   device=device, jit_kernel=jax.jit(kernel),
+                   device=device, jit_kernel=memoized_jit(kernel),
                    shared_dev=shared_dev)
 
     @property
@@ -65,7 +95,7 @@ class ExecutionContext:
         task's device buffers are recycled for its outputs (no-op on
         backends without donation support, e.g. CPU)."""
         if self._donating_jit is None:
-            self._donating_jit = jax.jit(self.kernel, donate_argnums=0)
+            self._donating_jit = memoized_jit(self.kernel, donate=True)
         return self._donating_jit
 
 

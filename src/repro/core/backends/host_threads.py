@@ -1,0 +1,75 @@
+"""Thread-pool host backend: tasks issued from worker threads with a
+bounded in-flight window.
+
+Where ``host-pipelined`` overlaps H2D and compute by interleaving async
+dispatches from one host thread, this backend overlaps them by issuing
+each task (transfer + kernel dispatch + retire) from a pool thread — the
+host-side analogue of multiple hardware queues.  JAX dispatch is
+thread-safe; concurrent tracing of the same shape serializes on JAX's own
+compilation lock, so the first dispatch per shape costs the same as the
+single-threaded backends.
+
+Ordering contract: outputs are collected into a task-indexed slot table,
+so the returned list is task-major, partition-minor regardless of the
+completion order of the workers.
+
+The in-flight ``window`` bounds how many tasks can be submitted but not
+yet retired — the same live-buffer bound the pipelined backend gets from
+its depth-``d`` deque, enforced here by blocking the submitting thread on
+the oldest outstanding future.
+"""
+from __future__ import annotations
+
+import collections
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import jax
+
+from repro.core.backends.base import ExecutionContext, StreamBackend, \
+    split_arrays
+
+
+class ThreadedHostBackend(StreamBackend):
+    name = "host-threads"
+    kind = "runner"
+
+    def __init__(self, workers: int = 4, window: int = 8):
+        assert workers >= 1 and window >= 1, (workers, window)
+        self.workers = workers
+        self.window = window
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    def _executor(self) -> ThreadPoolExecutor:
+        # lazy: module import registers the instance, and spawning threads
+        # at import time would cost every process that never dispatches
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.workers,
+                thread_name_prefix="host-threads")
+        return self._pool
+
+    def dispatch(self, ctx: ExecutionContext, config) -> list:
+        plans = [split_arrays(task, config.partitions)
+                 for task in split_arrays(ctx.chunked, config.tasks)]
+
+        def issue(parts):
+            devs = [jax.device_put(p, ctx.device) for p in parts]
+            outs = [ctx.jit_kernel(pd, ctx.shared_dev) for pd in devs]
+            # retire inside the worker: a completed future means the
+            # task's buffers are no longer accumulating in flight
+            jax.block_until_ready(outs)
+            return outs
+
+        pool = self._executor()
+        results: list = [None] * len(plans)
+        inflight: collections.deque = collections.deque()
+        for i, parts in enumerate(plans):
+            while len(inflight) >= self.window:
+                j, fut = inflight.popleft()
+                results[j] = fut.result()
+            inflight.append((i, pool.submit(issue, parts)))
+        while inflight:
+            j, fut = inflight.popleft()
+            results[j] = fut.result()
+        return [o for task_outs in results for o in task_outs]

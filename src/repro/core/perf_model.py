@@ -163,6 +163,21 @@ class PerformanceModel:
         yn = np.asarray(_mlp_forward(self.mlp_params, jnp.asarray(X)))
         return self.pipeline.inverse_y(yn)
 
+    def refit(self, X_raw: np.ndarray, y_speedup: np.ndarray, *,
+              epochs: int = 150, lr: float = 3e-3) -> float:
+        """Incremental online refit: continue adam from the current
+        parameters on freshly *measured* (features ++ config, speedup)
+        rows.  The feature pipeline stays frozen so the input space is
+        stable across refits; only the MLP moves.  This is the serving
+        drift-correction hook — a few hundred cheap steps on a handful of
+        rows, not a retrain.  Returns the final training loss."""
+        X = self.pipeline.transform(np.atleast_2d(np.asarray(X_raw, float)))
+        yn = self.pipeline.transform_y(
+            np.asarray(y_speedup, float).reshape(-1))
+        self.mlp_params, loss = _adam_train(self.mlp_params, X, yn,
+                                            lr=lr, epochs=epochs)
+        return float(loss)
+
     def predict_configs(self, prog_feats: np.ndarray,
                         configs) -> np.ndarray:
         """Rank many configs for one program (the runtime search core)."""

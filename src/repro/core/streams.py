@@ -55,8 +55,13 @@ class StreamedRunner:
 
     # -- execution -----------------------------------------------------------
 
-    def _dispatch(self, config: StreamConfig):
+    def dispatch(self, config: StreamConfig) -> list:
+        """Issue the full iteration space under ``config``; returns the
+        per-slice outputs (possibly still in flight — callers block)."""
         return self.backend.dispatch(self.ctx, config)
+
+    # legacy private name, used by older tests
+    _dispatch = dispatch
 
     def warmup(self, config: StreamConfig) -> None:
         """Compile every sub-slice shape before timing."""

@@ -1,18 +1,28 @@
-"""Batched serving driver: prefill + decode loop with a KV/state cache.
+"""Serving drivers.
 
-Requests are batched (continuous-batching-lite: fixed batch slots, each
-slot holds one sequence; finished slots are refilled from the queue), the
-cache is pre-allocated at max_seq, and the decode step is the same
-``serve_step`` the dry-run lowers at pod scale.
+Two entry points share this module:
 
-CPU-sized by default (reduced configs).
+  * the batched LM driver (``serve``): prefill + decode loop with a
+    KV/state cache; requests are batched (continuous-batching-lite:
+    fixed batch slots, each slot holds one sequence; finished slots are
+    refilled from the queue), the cache is pre-allocated at max_seq, and
+    the decode step is the same ``serve_step`` the dry-run lowers at pod
+    scale.  CPU-sized by default (reduced configs).
+
+  * the adaptive streamed-workload driver (``adaptive_serve``,
+    ``--adaptive``): drains a mixed multi-tenant trace through
+    :class:`repro.serving.AdaptiveScheduler` — per-request model-predicted
+    configs, tuning-cache warm hits, JSONL telemetry, and drift-triggered
+    refinement.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import sys
 import time
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -107,14 +117,102 @@ def serve(
         tokens_per_s=total_tokens / wall, outputs=outputs)
 
 
+DEFAULT_ADAPTIVE_WORKLOADS = ("vecadd", "dotprod", "mvmult")
+
+
+def adaptive_serve(
+    workloads: Sequence[str] = DEFAULT_ADAPTIVE_WORKLOADS,
+    *,
+    n_requests: int = 10,
+    backend: str = "host-sync",
+    policy: str = "fifo",
+    telemetry_path: Optional[str] = None,
+    cache_path: Optional[str] = None,
+    drift_threshold: float = 4.0,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """Serve ``n_requests`` of a mixed multi-tenant trace adaptively.
+
+    Returns the telemetry summary dict (requests, hit rate, refinements,
+    mean prediction error); the per-request JSONL stream lands at
+    ``telemetry_path`` when given, and new tuning-cache entries persist
+    to ``cache_path``.
+    """
+    from repro.core.autotuner import TuningCache
+    from repro.serving import (AdaptiveScheduler, DriftDetector,
+                               OverlapHeuristicModel, TelemetryLog,
+                               make_trace)
+
+    occurrences = -(-n_requests // len(workloads))  # ceil
+    trace = make_trace(list(workloads), occurrences=occurrences,
+                       seed=seed)[:n_requests]
+    sched = AdaptiveScheduler(
+        OverlapHeuristicModel(),
+        backend=backend, policy=policy,
+        cache=TuningCache(cache_path),
+        telemetry=TelemetryLog(telemetry_path),
+        drift=DriftDetector(threshold=drift_threshold),
+        keep_outputs=False)
+    sched.submit_all(trace)
+    t0 = time.perf_counter()
+    results = sched.run()
+    wall = time.perf_counter() - t0
+    if verbose:
+        # progress goes to stderr so `--adaptive > summary.json` stays
+        # valid JSON
+        for r in results:
+            print(f"  #{r.sample.seq:<3d} {r.request.tenant:10s} "
+                  f"{r.request.workload:12s} "
+                  f"{r.config.partitions}x{r.config.tasks} "
+                  f"{'hit ' if r.cache_hit else 'cold'} "
+                  f"measured={r.measured_s*1e6:8.0f}us"
+                  + (f" predicted={r.predicted_s*1e6:8.0f}us"
+                     if r.predicted_s else ""), file=sys.stderr)
+    summary = sched.telemetry.summary()
+    summary["wall_s"] = wall
+    summary["backend"] = backend
+    summary["policy"] = policy
+    if cache_path:
+        sched.cache.save()
+    sched.telemetry.close()
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--arch", choices=list_archs(),
+                    help="LM arch for the batched driver "
+                         "(required unless --adaptive)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--adaptive", action="store_true",
+                    help="serve a streamed-workload trace through the "
+                         "adaptive scheduler instead of the LM driver")
+    ap.add_argument("--workloads", default=",".join(
+        DEFAULT_ADAPTIVE_WORKLOADS))
+    ap.add_argument("--backend", default="host-sync")
+    ap.add_argument("--policy", default="fifo",
+                    choices=("fifo", "priority", "fair"))
+    ap.add_argument("--telemetry", default=None,
+                    help="append-only JSONL telemetry path")
+    ap.add_argument("--tuning-cache", default=None,
+                    help="persistent tuning-cache JSON path")
     args = ap.parse_args()
+
+    if args.adaptive:
+        summary = adaptive_serve(
+            args.workloads.split(","),
+            n_requests=args.requests, backend=args.backend,
+            policy=args.policy, telemetry_path=args.telemetry,
+            cache_path=args.tuning_cache)
+        print(json.dumps(summary, indent=2))
+        return
+
+    if not args.arch:
+        ap.error("--arch is required unless --adaptive is given")
     res = serve(args.arch, n_requests=args.requests, batch_slots=args.slots,
                 prompt_len=args.prompt_len, gen_len=args.gen_len)
     print(f"{res.tokens_generated} tokens in {res.wall_s:.2f}s "

@@ -1,0 +1,28 @@
+"""Adaptive serving subsystem: the paper's runtime loop under multi-tenant
+traffic.
+
+Lifecycle per request (see README "Adaptive serving"):
+
+  submit → queue (fifo / priority / fair) → cache hit? dispatch
+                                          : features → model search →
+                                            cache → dispatch
+  every dispatch → telemetry (predicted vs measured) → drift detector
+  drift → refiner: re-profile small candidate set, refresh cache entry,
+          incremental model refit
+"""
+from repro.serving.queue import POLICIES, RequestQueue, WorkloadRequest
+from repro.serving.refinement import (DriftDetector, RefinementResult,
+                                      Refiner)
+from repro.serving.scheduler import (AdaptiveScheduler,
+                                     OverlapHeuristicModel, RequestResult,
+                                     make_trace)
+from repro.serving.telemetry import (TelemetryLog, TelemetrySample,
+                                     relative_error)
+
+__all__ = [
+    "POLICIES", "RequestQueue", "WorkloadRequest",
+    "DriftDetector", "RefinementResult", "Refiner",
+    "AdaptiveScheduler", "OverlapHeuristicModel", "RequestResult",
+    "make_trace",
+    "TelemetryLog", "TelemetrySample", "relative_error",
+]

@@ -1,0 +1,91 @@
+"""Multi-tenant workload request queue.
+
+A :class:`WorkloadRequest` is one unit of serving work: a named streamed
+workload plus its host data, tagged with the submitting tenant and a
+priority.  :class:`RequestQueue` orders them under one of three policies:
+
+  ``fifo``     — global arrival order;
+  ``priority`` — higher ``priority`` first, arrival order within a level
+                 (stable: equal-priority requests never reorder);
+  ``fair``     — round-robin across tenants, arrival order within a
+                 tenant, so one chatty tenant cannot starve the rest.
+
+All three are deterministic given the submission sequence — the property
+the scheduler tests rely on.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+import itertools
+from typing import Optional
+
+POLICIES = ("fifo", "priority", "fair")
+
+
+@dataclasses.dataclass
+class WorkloadRequest:
+    """One serving request: run ``workload`` over this request's data."""
+
+    workload: str
+    chunked: dict
+    shared: dict
+    tenant: str = "default"
+    priority: int = 0
+    #: arrival sequence number, assigned at enqueue time
+    seq: int = -1
+
+
+class RequestQueue:
+    def __init__(self, policy: str = "fifo"):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.policy = policy
+        self._seq = itertools.count()
+        self._fifo: collections.deque = collections.deque()
+        self._heap: list = []
+        self._per_tenant: dict[str, collections.deque] = {}
+        self._rr: collections.deque = collections.deque()  # tenant rotation
+
+    def push(self, req: WorkloadRequest) -> WorkloadRequest:
+        req.seq = next(self._seq)
+        if self.policy == "fifo":
+            self._fifo.append(req)
+        elif self.policy == "priority":
+            heapq.heappush(self._heap, (-req.priority, req.seq, req))
+        else:  # fair
+            if req.tenant not in self._per_tenant:
+                self._per_tenant[req.tenant] = collections.deque()
+                self._rr.append(req.tenant)
+            self._per_tenant[req.tenant].append(req)
+        return req
+
+    def pop(self) -> WorkloadRequest:
+        if not len(self):
+            raise IndexError("pop from an empty RequestQueue")
+        if self.policy == "fifo":
+            return self._fifo.popleft()
+        if self.policy == "priority":
+            return heapq.heappop(self._heap)[2]
+        tenant = self._rr.popleft()
+        req = self._per_tenant[tenant].popleft()
+        if self._per_tenant[tenant]:
+            self._rr.append(tenant)       # rotate: next tenant goes first
+        else:
+            del self._per_tenant[tenant]
+        return req
+
+    def peek_tenants(self) -> list[str]:
+        """Tenants with queued work, in service order (fair policy)."""
+        return list(self._rr)
+
+    def __len__(self) -> int:
+        if self.policy == "fifo":
+            return len(self._fifo)
+        if self.policy == "priority":
+            return len(self._heap)
+        return sum(len(d) for d in self._per_tenant.values())
+
+    def __bool__(self) -> bool:
+        return len(self) > 0

@@ -1,0 +1,166 @@
+"""Drift detection and online refinement — the offline-learn / online-
+correct loop the paper leaves open.
+
+The paper's model is trained offline and applied once per program at
+runtime (§3.3).  Under sustained serving the prediction can drift away
+from reality: the data distribution shifts within a shape bucket, the
+machine's load changes, or the model was simply wrong for this workload.
+:class:`DriftDetector` watches the rolling relative prediction error per
+workload bucket; past a threshold, :class:`Refiner` closes the loop:
+
+  1. evict the stale cache entry,
+  2. re-profile a *small* candidate set — the model's current top-k, the
+     incumbent config, and the single-stream baseline (measured ground
+     truth, a handful of runs, not the full grid),
+  3. write back a cache entry whose "predicted" speedup is the measured
+     one (``source="refined"``), so subsequent hits predict accurately,
+  4. feed the measured (features ++ config, speedup) rows to the model's
+     incremental ``refit`` hook, nudging future *cold* searches too.
+
+Memeti & Pllana (arXiv:2106.01441) show exactly this measured-feedback
+re-planning beating static offline decisions on heterogeneous systems.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.autotuner import TuneResult, TuningCache
+from repro.core.perf_model import assemble_rows
+from repro.core.search import search_best
+from repro.core.stream_config import SINGLE_STREAM, StreamConfig, \
+    default_space
+from repro.core.streams import StreamedRunner
+
+
+class DriftDetector:
+    """Rolling prediction-error window per workload bucket.
+
+    ``observe(key, rel_error)`` pushes one sample and returns True when
+    the bucket's mean error over the window crosses ``threshold`` (with
+    at least ``min_samples`` observed).  After a refinement the caller
+    ``reset``s the bucket: the window clears and a ``cooldown`` of
+    subsequent observations is ignored for triggering, so one drift event
+    yields one refinement, not a burst.
+    """
+
+    def __init__(self, *, window: int = 8, threshold: float = 1.0,
+                 min_samples: int = 2, cooldown: int = 2):
+        assert window >= min_samples >= 1
+        self.window = window
+        self.threshold = threshold
+        self.min_samples = min_samples
+        self.cooldown = cooldown
+        self._errors: dict[str, collections.deque] = {}
+        self._cooldowns: dict[str, int] = {}
+        self.triggers = 0
+
+    def observe(self, key: str, rel_error: Optional[float]) -> bool:
+        if rel_error is None:
+            return False
+        dq = self._errors.setdefault(
+            key, collections.deque(maxlen=self.window))
+        dq.append(float(rel_error))
+        if self._cooldowns.get(key, 0) > 0:
+            self._cooldowns[key] -= 1
+            return False
+        if len(dq) >= self.min_samples and \
+                sum(dq) / len(dq) > self.threshold:
+            self.triggers += 1
+            return True
+        return False
+
+    def rolling_error(self, key: str) -> Optional[float]:
+        dq = self._errors.get(key)
+        return (sum(dq) / len(dq)) if dq else None
+
+    def reset(self, key: str) -> None:
+        self._errors.pop(key, None)
+        self._cooldowns[key] = self.cooldown
+
+
+@dataclasses.dataclass
+class RefinementResult:
+    key: str
+    old_config: Optional[StreamConfig]
+    new_config: StreamConfig
+    measured: dict                 # StreamConfig -> seconds
+    t_single_s: float
+    speedup: float                 # measured, of new_config
+    refit_loss: Optional[float]    # None when the model has no refit hook
+    seconds: float                 # wall time of the whole refinement
+
+
+class Refiner:
+    """Re-profiles a small candidate set and refreshes cache + model."""
+
+    def __init__(self, model, cache: TuningCache, *,
+                 candidates: Optional[Sequence[StreamConfig]] = None,
+                 top_k: int = 3, reps: int = 1,
+                 refit_epochs: int = 150, refit_lr: float = 3e-3):
+        self.model = model
+        self.cache = cache
+        self.candidates = list(candidates or default_space())
+        self.top_k = top_k
+        self.reps = reps
+        self.refit_epochs = refit_epochs
+        self.refit_lr = refit_lr
+        self.history: list[RefinementResult] = []
+
+    def refine(self, runner: StreamedRunner, key: str,
+               prog_feats: Optional[np.ndarray],
+               current: Optional[TuneResult]) -> RefinementResult:
+        t0 = time.perf_counter()
+        if prog_feats is None:
+            # hit on a persisted cache from a previous process: the raw
+            # features were never extracted here, so re-profile them
+            from repro.core.features import extract_features
+            prog_feats = extract_features(runner, profile_reps=1).values
+
+        n_rows = next(iter(runner.chunked.values())).shape[0]
+        # empty would make search_best fall back to the full default grid
+        cands = [c for c in self.candidates
+                 if c.partitions * c.tasks <= n_rows] or [SINGLE_STREAM]
+        k = min(self.top_k, len(cands))
+        picks, _, _ = search_best(self.model, prog_feats, cands, top_k=k)
+        if k == 1:
+            picks = [picks]
+        probe = list(dict.fromkeys(
+            [*picks]
+            + ([current.config] if current is not None else [])
+            + [SINGLE_STREAM]))
+
+        self.cache.invalidate(key)
+        t_single = runner.run(SINGLE_STREAM, reps=self.reps)
+        measured = {SINGLE_STREAM: t_single}
+        for cfg in probe:
+            if cfg != SINGLE_STREAM:
+                measured[cfg] = runner.run(cfg, reps=self.reps)
+        best = min(measured, key=measured.get)
+        speedup = t_single / max(measured[best], 1e-12)
+
+        self.cache.put(key, TuneResult(
+            best, float(speedup), 0.0, 0.0,
+            backend=runner.backend.name, source="refined"))
+
+        refit_loss = None
+        if hasattr(self.model, "refit"):
+            rows = assemble_rows(prog_feats, list(measured))
+            ys = np.array([t_single / max(measured[c], 1e-12)
+                           for c in measured])
+            refit_loss = self.model.refit(rows, ys,
+                                          epochs=self.refit_epochs,
+                                          lr=self.refit_lr)
+
+        result = RefinementResult(
+            key=key,
+            old_config=current.config if current is not None else None,
+            new_config=best, measured=measured, t_single_s=t_single,
+            speedup=float(speedup), refit_loss=refit_loss,
+            seconds=time.perf_counter() - t0)
+        self.history.append(result)
+        return result

@@ -1,0 +1,276 @@
+"""The adaptive serving scheduler: the paper's feature → model → config
+loop, run online over a multi-tenant request stream.
+
+Per request, the decision point is exactly paper §3.3 ("used as a utility
+to quickly search for a good configuration at runtime"), made cheap
+enough to sit on the serving path:
+
+  warm path   TuningCache hit (microseconds) → dispatch immediately;
+  cold path   extract features (one profiled iteration), rank the config
+              space with the performance model via ``search_best``,
+              cache the winner, dispatch.
+
+Every dispatch appends a :class:`~repro.serving.telemetry.TelemetrySample`
+(chosen config, predicted vs. measured runtime) to the telemetry log, and
+feeds the relative prediction error to the
+:class:`~repro.serving.refinement.DriftDetector`.  A triggered bucket is
+handed to the :class:`~repro.serving.refinement.Refiner`, which
+re-profiles a small candidate set, refreshes the cache entry, and refits
+the model incrementally — closing the offline-learn / online-correct
+loop.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core import features as feat_lib
+from repro.core.autotuner import TuneResult, TuningCache
+from repro.core.features import RAW_FEATURE_NAMES
+from repro.core.search import search_best
+from repro.core.stream_config import SINGLE_STREAM, StreamConfig, \
+    default_space
+from repro.core.streams import StreamedRunner
+from repro.core.workloads import get_workload
+from repro.serving.queue import RequestQueue, WorkloadRequest
+from repro.serving.refinement import DriftDetector, Refiner
+from repro.serving.telemetry import TelemetryLog, TelemetrySample, \
+    relative_error
+
+_I_T_SINGLE = RAW_FEATURE_NAMES.index("t_single_us")
+_I_T_XFER = RAW_FEATURE_NAMES.index("t_transfer_us")
+_I_T_COMP = RAW_FEATURE_NAMES.index("t_compute_us")
+
+
+class OverlapHeuristicModel:
+    """Zero-training stand-in for a trained :class:`PerformanceModel`.
+
+    Scores each candidate with the classic streams overlap bound: with
+    ``n`` tasks the makespan is the dominant phase plus ``1/n`` of the
+    overlapped phase plus a per-dispatch overhead that grows with
+    partitions × tasks.  Deterministic given the extracted features, so
+    the serving smoke paths (CLI, CI trace) need no training set.
+    """
+
+    def __init__(self, overhead_s: float = 30e-6):
+        self.overhead_s = overhead_s
+
+    def predict_configs(self, prog_feats: np.ndarray,
+                        configs) -> np.ndarray:
+        t_comp = float(prog_feats[_I_T_COMP]) * 1e-6
+        t_xfer = float(prog_feats[_I_T_XFER]) * 1e-6
+        base = max(t_comp + t_xfer, 1e-9)
+        preds = []
+        for c in configs:
+            makespan = (max(t_comp, t_xfer)
+                        + min(t_comp, t_xfer) / c.tasks
+                        + self.overhead_s * c.partitions * c.tasks)
+            preds.append(base / makespan)
+        return np.asarray(preds)
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request: WorkloadRequest
+    config: StreamConfig
+    outputs: list                  # per-slice outputs, task-major order
+    measured_s: float
+    predicted_s: Optional[float]
+    cache_hit: bool
+    refined: bool
+    sample: TelemetrySample
+
+
+class AdaptiveScheduler:
+    """Drains a :class:`RequestQueue`, making one model-informed placement
+    decision per request and learning from every measurement."""
+
+    def __init__(self, model, *,
+                 backend: str = "host-sync",
+                 policy: str = "fifo",
+                 cache: Optional[TuningCache] = None,
+                 candidates: Optional[Sequence[StreamConfig]] = None,
+                 telemetry: Optional[TelemetryLog] = None,
+                 drift: Optional[DriftDetector] = None,
+                 refiner: Optional[Refiner] = None,
+                 model_tag: str = "",
+                 warm_before_measure: bool = True,
+                 keep_outputs: bool = True):
+        self.model = model
+        self.backend_name = backend
+        self.queue = RequestQueue(policy)
+        self.cache = cache if cache is not None else TuningCache()
+        self.candidates = list(candidates or default_space())
+        self.telemetry = telemetry if telemetry is not None else TelemetryLog()
+        self.drift = drift if drift is not None else DriftDetector()
+        self.refiner = refiner if refiner is not None else Refiner(
+            model, self.cache, candidates=self.candidates)
+        self.model_tag = model_tag
+        self.warm_before_measure = warm_before_measure
+        self.keep_outputs = keep_outputs
+        self.stats: collections.Counter = collections.Counter()
+        # per-bucket serving state: raw program features and the profiled
+        # single-stream runtime (the model predicts *speedup*; runtime
+        # prediction needs the single-stream anchor)
+        self._feats: dict[str, np.ndarray] = {}
+        self._t_single: dict[str, float] = {}
+        self._warmed: set = set()
+        self._seq = 0
+
+    # -- request intake -------------------------------------------------------
+
+    def submit(self, request: WorkloadRequest) -> WorkloadRequest:
+        self.stats[f"tenant.{request.tenant}.submitted"] += 1
+        return self.queue.push(request)
+
+    def submit_all(self, requests) -> None:
+        for r in requests:
+            self.submit(r)
+
+    # -- serving loop ---------------------------------------------------------
+
+    def run(self, max_requests: Optional[int] = None) -> list[RequestResult]:
+        """Drain the queue (up to ``max_requests``), one decision per
+        request, in queue-policy order."""
+        results = []
+        while self.queue and (max_requests is None
+                              or len(results) < max_requests):
+            results.append(self.step())
+        return results
+
+    def step(self) -> RequestResult:
+        return self._process(self.queue.pop())
+
+    def _process(self, req: WorkloadRequest) -> RequestResult:
+        wl = get_workload(req.workload)
+        # one runner per request: each request carries its OWN shared
+        # buffers, so a cached ExecutionContext would serve stale
+        # shared_dev data.  The expensive part — kernel compilation — is
+        # already shared across contexts by backends.base.memoized_jit;
+        # what remains per request is the shared-buffer H2D transfer,
+        # which is semantically required.
+        runner = StreamedRunner(wl, req.chunked, req.shared,
+                                backend=self.backend_name)
+        n_rows = next(iter(req.chunked.values())).shape[0]
+        key = self.cache.key(wl.name, req.chunked, req.shared,
+                             self.backend_name, self.model_tag)
+
+        hit = self.cache.get(key, valid=lambda r: (
+            r.config.partitions * r.config.tasks <= n_rows))
+        if hit is not None:
+            entry, cache_hit = hit, True
+            if key not in self._t_single:
+                # warm hit from a cache persisted by a previous process:
+                # the single-stream anchor was never profiled here, and
+                # without it predicted runtime — and therefore drift
+                # detection — would stay disabled for this bucket.  One
+                # measured single-stream run restores both.
+                self._t_single[key] = runner.run(SINGLE_STREAM, reps=1)
+        else:
+            entry, cache_hit = self._cold_tune(runner, key, n_rows), False
+        config = entry.config
+
+        # dispatch + measure (first occurrence of a (bucket, config) pair
+        # warms up so measured runtime is execution, not compilation)
+        if self.warm_before_measure and (key, config) not in self._warmed:
+            runner.warmup(config)
+            self._warmed.add((key, config))
+        t0 = time.perf_counter()
+        outs = runner.dispatch(config)
+        jax.block_until_ready(outs)
+        # read back like StreamedRunner.run does, so measured_s and the
+        # single-stream prediction anchor are timed on the same basis
+        # (dispatch + compute + D2H); otherwise rel_error carries a
+        # constant bias on transfer-heavy workloads
+        for o in outs:
+            np.asarray(jax.tree.leaves(o)[0], copy=False)
+        measured_s = time.perf_counter() - t0
+
+        predicted_s = self._predicted_runtime(key, entry)
+        rel = relative_error(measured_s, predicted_s)
+
+        refined = False
+        if self.drift.observe(key, rel):
+            refinement = self.refiner.refine(runner, key,
+                                             self._feats.get(key), entry)
+            # recalibrate the runtime anchor from the refinement's own
+            # measured single-stream run
+            self._t_single[key] = refinement.t_single_s
+            self.drift.reset(key)
+            self.stats["refinements"] += 1
+            refined = True
+
+        self._seq += 1
+        sample = TelemetrySample(
+            seq=self._seq, tenant=req.tenant, workload=wl.name, key=key,
+            backend=self.backend_name, partitions=config.partitions,
+            tasks=config.tasks, cache_hit=cache_hit,
+            predicted_s=predicted_s, measured_s=measured_s, rel_error=rel,
+            refined=refined, source=entry.source)
+        self.telemetry.append(sample)
+
+        self.stats["requests"] += 1
+        self.stats["cache_hits" if cache_hit else "cold_misses"] += 1
+        self.stats[f"tenant.{req.tenant}.served"] += 1
+
+        return RequestResult(
+            request=req, config=config,
+            outputs=outs if self.keep_outputs else [],
+            measured_s=measured_s, predicted_s=predicted_s,
+            cache_hit=cache_hit, refined=refined, sample=sample)
+
+    # -- cold path ------------------------------------------------------------
+
+    def _cold_tune(self, runner: StreamedRunner, key: str,
+                   n_rows: int) -> TuneResult:
+        t0 = time.perf_counter()
+        feats = feat_lib.extract_features(runner, profile_reps=1)
+        t_feat = time.perf_counter() - t0
+        self._feats[key] = feats.values
+        self._t_single[key] = float(feats.values[_I_T_SINGLE]) * 1e-6
+        # guard: an empty filtered list would make search_best fall back
+        # to the FULL default grid, returning an unsplittable config
+        cands = [c for c in self.candidates
+                 if c.partitions * c.tasks <= n_rows] or [SINGLE_STREAM]
+        best, preds, t_search = search_best(self.model, feats.values, cands)
+        self.stats["model_searches"] += 1
+        result = TuneResult(best, float(np.max(preds)), t_feat, t_search,
+                            backend=self.backend_name, source="model")
+        self.cache.put(key, result)
+        return result
+
+    def _predicted_runtime(self, key: str,
+                           entry: TuneResult) -> Optional[float]:
+        t_single = self._t_single.get(key)
+        if t_single is None or entry.predicted_speedup <= 0:
+            return None
+        return t_single / entry.predicted_speedup
+
+
+def make_trace(workloads: Sequence[str], *, occurrences: int = 2,
+               tenants: Sequence[str] = ("tenant-a", "tenant-b"),
+               scale_index: int = 0, seed: int = 0,
+               priorities: Optional[Sequence[int]] = None
+               ) -> list[WorkloadRequest]:
+    """A deterministic mixed-workload request trace: ``occurrences``
+    rounds over ``workloads``, data re-drawn per request (same shapes, so
+    later rounds land in the same tuning bucket), tenants round-robin."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for round_idx in range(occurrences):
+        for i, name in enumerate(workloads):
+            wl = get_workload(name)
+            scale = wl.datasets[min(scale_index, len(wl.datasets) - 1)]
+            chunked, shared = wl.make_data(scale, rng)
+            reqs.append(WorkloadRequest(
+                workload=name, chunked=chunked, shared=shared,
+                tenant=tenants[(round_idx * len(workloads) + i)
+                               % len(tenants)],
+                priority=(priorities[i % len(priorities)]
+                          if priorities else 0)))
+    return reqs

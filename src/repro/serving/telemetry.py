@@ -1,0 +1,113 @@
+"""Serving telemetry: one append-only JSONL record per dispatched request.
+
+Each :class:`TelemetrySample` captures the serving decision and its
+outcome — which config was chosen, where it came from (model search,
+cache hit, or drift refinement), what runtime the model predicted, and
+what was actually measured.  The relative prediction error
+``|measured - predicted| / predicted`` is the drift-detection signal
+(:mod:`repro.serving.refinement`) and the refit target provider.
+
+The log is line-buffered JSONL: every ``append`` writes and flushes one
+line, so a crashed serving process loses at most the in-flight request —
+the same durability contract as the tuning cache's atomic save, but for
+a stream instead of a snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import IO, Iterator, Optional
+
+
+@dataclasses.dataclass
+class TelemetrySample:
+    seq: int                      # scheduler-assigned dispatch sequence
+    tenant: str
+    workload: str
+    key: str                      # tuning-cache key (workload bucket id)
+    backend: str
+    partitions: int
+    tasks: int
+    cache_hit: bool
+    predicted_s: Optional[float]  # model-predicted runtime (None if unknown)
+    measured_s: float
+    rel_error: Optional[float]    # |measured - predicted| / predicted
+    refined: bool = False         # this request triggered a refinement
+    source: str = "model"         # config provenance: model | refined
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "TelemetrySample":
+        fields = {f.name for f in dataclasses.fields(TelemetrySample)}
+        return TelemetrySample(**{k: v for k, v in d.items() if k in fields})
+
+
+def relative_error(measured_s: float,
+                   predicted_s: Optional[float]) -> Optional[float]:
+    if predicted_s is None or predicted_s <= 0:
+        return None
+    return abs(measured_s - predicted_s) / predicted_s
+
+
+class TelemetryLog:
+    """In-memory sample list, mirrored to an append-only JSONL file."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.samples: list[TelemetrySample] = []
+        self._fh: Optional[IO[str]] = None
+
+    def append(self, sample: TelemetrySample) -> None:
+        self.samples.append(sample)
+        if self.path is not None:
+            if self._fh is None:
+                os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                            exist_ok=True)
+                self._fh = open(self.path, "a")
+            self._fh.write(json.dumps(sample.to_json(),
+                                      separators=(",", ":")) + "\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+    def __iter__(self) -> Iterator[TelemetrySample]:
+        return iter(self.samples)
+
+    @staticmethod
+    def read(path: str) -> list[TelemetrySample]:
+        out = []
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if line:
+                    out.append(TelemetrySample.from_json(json.loads(line)))
+        return out
+
+    def summary(self) -> dict:
+        """Aggregate view for dashboards / the --serve benchmark JSON."""
+        n = len(self.samples)
+        hits = sum(s.cache_hit for s in self.samples)
+        errs = [s.rel_error for s in self.samples if s.rel_error is not None]
+        per_workload: dict[str, list[float]] = {}
+        for s in self.samples:
+            if s.rel_error is not None:
+                per_workload.setdefault(s.workload, []).append(s.rel_error)
+        return {
+            "requests": n,
+            "cache_hits": hits,
+            "hit_rate": hits / n if n else 0.0,
+            "refinements": sum(s.refined for s in self.samples),
+            "total_measured_s": sum(s.measured_s for s in self.samples),
+            "mean_rel_error": (sum(errs) / len(errs)) if errs else None,
+            "mean_rel_error_by_workload": {
+                w: sum(v) / len(v) for w, v in sorted(per_workload.items())},
+        }

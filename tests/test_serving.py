@@ -1,0 +1,379 @@
+"""Adaptive serving subsystem: queue ordering, cache-hit vs cold-miss
+dispatch, telemetry JSONL round-trip, drift-triggered refinement, and the
+end-to-end acceptance trace (outputs allclose to the host-sync reference,
+warm second occurrences, one refinement on injected misprediction)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.autotuner import TuningCache
+from repro.core.perf_model import PerformanceModel
+from repro.core.stream_config import SINGLE_STREAM, StreamConfig
+from repro.core.streams import StreamedRunner
+from repro.core.workloads import get_workload
+from repro.serving import (AdaptiveScheduler, DriftDetector,
+                           OverlapHeuristicModel, Refiner, RequestQueue,
+                           TelemetryLog, TelemetrySample, WorkloadRequest,
+                           make_trace, relative_error)
+
+
+class _CalibratedStub:
+    """Predicts speedup 1.0 for every config (so the stable-sorted search
+    picks single-stream and predicted runtime == profiled single-stream
+    time — tightly calibrated, which keeps natural drift near zero)."""
+
+    def predict_configs(self, feats, candidates):
+        return np.ones(len(candidates))
+
+
+class _RecordingRefitStub(_CalibratedStub):
+    def __init__(self):
+        self.refit_calls = []
+
+    def refit(self, X, y, **kw):
+        self.refit_calls.append((np.atleast_2d(X).shape[0], kw))
+        return 0.0
+
+
+def _req(workload="vecadd", rows=256, seed=0, **kw):
+    wl = get_workload(workload)
+    chunked, shared = wl.make_data(rows, np.random.default_rng(seed))
+    return WorkloadRequest(workload=workload, chunked=chunked,
+                          shared=shared, **kw)
+
+
+# -- queue -------------------------------------------------------------------
+
+
+def test_fifo_queue_preserves_arrival_order():
+    q = RequestQueue("fifo")
+    for i in range(5):
+        q.push(_req(tenant=f"t{i}"))
+    assert [q.pop().tenant for _ in range(5)] == [f"t{i}" for i in range(5)]
+    assert not q
+    with pytest.raises(IndexError):
+        q.pop()
+
+
+def test_priority_queue_orders_by_priority_then_arrival():
+    q = RequestQueue("priority")
+    q.push(_req(tenant="low-1", priority=0))
+    q.push(_req(tenant="high", priority=5))
+    q.push(_req(tenant="low-2", priority=0))
+    q.push(_req(tenant="mid", priority=2))
+    order = [q.pop().tenant for _ in range(4)]
+    assert order == ["high", "mid", "low-1", "low-2"]
+
+
+def test_fair_queue_round_robins_tenants():
+    q = RequestQueue("fair")
+    for i in range(3):
+        q.push(_req(tenant="chatty", seed=i))
+    q.push(_req(tenant="quiet"))
+    order = [q.pop().tenant for _ in range(4)]
+    # quiet is served second despite arriving fourth
+    assert order == ["chatty", "quiet", "chatty", "chatty"]
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown policy"):
+        RequestQueue("lifo")
+
+
+# -- telemetry ---------------------------------------------------------------
+
+
+def test_telemetry_jsonl_roundtrip(tmp_path):
+    path = str(tmp_path / "telemetry.jsonl")
+    log = TelemetryLog(path)
+    samples = [
+        TelemetrySample(seq=1, tenant="a", workload="vecadd", key="k1",
+                        backend="host-sync", partitions=1, tasks=4,
+                        cache_hit=False, predicted_s=1e-3, measured_s=2e-3,
+                        rel_error=1.0),
+        TelemetrySample(seq=2, tenant="b", workload="sgemm", key="k2",
+                        backend="host-sync", partitions=2, tasks=2,
+                        cache_hit=True, predicted_s=None, measured_s=5e-4,
+                        rel_error=None, refined=True, source="refined"),
+    ]
+    for s in samples:
+        log.append(s)
+    log.close()
+    assert TelemetryLog.read(path) == samples
+    # append-only: a second log object extends, not truncates
+    log2 = TelemetryLog(path)
+    log2.append(dataclasses.replace(samples[0], seq=3))
+    log2.close()
+    assert [s.seq for s in TelemetryLog.read(path)] == [1, 2, 3]
+
+
+def test_telemetry_summary():
+    log = TelemetryLog()
+    log.append(TelemetrySample(seq=1, tenant="a", workload="w", key="k",
+                               backend="b", partitions=1, tasks=1,
+                               cache_hit=False, predicted_s=1.0,
+                               measured_s=2.0, rel_error=1.0))
+    log.append(TelemetrySample(seq=2, tenant="a", workload="w", key="k",
+                               backend="b", partitions=1, tasks=1,
+                               cache_hit=True, predicted_s=2.0,
+                               measured_s=2.0, rel_error=0.0))
+    s = log.summary()
+    assert s["requests"] == 2 and s["cache_hits"] == 1
+    assert s["hit_rate"] == 0.5
+    assert s["mean_rel_error"] == pytest.approx(0.5)
+    assert s["mean_rel_error_by_workload"] == {"w": pytest.approx(0.5)}
+
+
+def test_relative_error():
+    assert relative_error(2.0, 1.0) == pytest.approx(1.0)
+    assert relative_error(1.0, 2.0) == pytest.approx(0.5)
+    assert relative_error(1.0, None) is None
+    assert relative_error(1.0, 0.0) is None
+
+
+# -- drift detector ----------------------------------------------------------
+
+
+def test_drift_fires_after_min_samples_over_threshold():
+    d = DriftDetector(window=4, threshold=1.0, min_samples=2, cooldown=2)
+    assert not d.observe("k", 5.0)          # only one sample
+    assert d.observe("k", 5.0)              # mean 5.0 > 1.0, n=2
+    d.reset("k")
+    # cooldown: the next two high-error observations may not trigger
+    assert not d.observe("k", 5.0)
+    assert not d.observe("k", 5.0)
+    assert d.observe("k", 5.0)              # cooldown exhausted, fires again
+    assert d.triggers == 2
+
+
+def test_drift_ignores_small_errors_and_none():
+    d = DriftDetector(window=4, threshold=1.0, min_samples=2)
+    for _ in range(6):
+        assert not d.observe("k", 0.2)
+    assert not d.observe("k", None)
+    assert d.rolling_error("k") == pytest.approx(0.2)
+    assert d.rolling_error("other") is None
+
+
+def test_drift_windows_are_per_key():
+    d = DriftDetector(window=4, threshold=1.0, min_samples=2)
+    d.observe("a", 9.0)
+    assert not d.observe("b", 9.0)          # b has only one sample
+    assert d.observe("a", 9.0)
+
+
+# -- scheduler dispatch paths ------------------------------------------------
+
+
+def test_cold_miss_then_cache_hit_dispatch():
+    sched = AdaptiveScheduler(_CalibratedStub(), backend="host-sync")
+    sched.submit(_req(seed=0))
+    sched.submit(_req(seed=1))              # same bucket, fresh data
+    r_cold, r_warm = sched.run()
+    assert not r_cold.cache_hit and r_warm.cache_hit
+    assert sched.stats["model_searches"] == 1
+    assert sched.stats["cache_hits"] == 1
+    assert sched.stats["cold_misses"] == 1
+    assert r_warm.config == r_cold.config
+    assert r_cold.sample.source == "model"
+    # predicted runtime is anchored to the profiled single-stream time
+    assert r_warm.predicted_s is not None and r_warm.predicted_s > 0
+
+
+def test_scheduler_respects_priority_policy():
+    sched = AdaptiveScheduler(_CalibratedStub(), policy="priority")
+    sched.submit(_req(tenant="background", priority=0))
+    sched.submit(_req(tenant="interactive", priority=9))
+    results = sched.run()
+    assert [r.request.tenant for r in results] == ["interactive",
+                                                   "background"]
+
+
+def test_scheduler_writes_telemetry_jsonl(tmp_path):
+    path = str(tmp_path / "t.jsonl")
+    sched = AdaptiveScheduler(_CalibratedStub(),
+                              telemetry=TelemetryLog(path))
+    sched.submit_all([_req(seed=0), _req(seed=1)])
+    sched.run()
+    sched.telemetry.close()
+    back = TelemetryLog.read(path)
+    assert len(back) == 2
+    assert back == sched.telemetry.samples
+    assert [s.cache_hit for s in back] == [False, True]
+
+
+# -- refinement --------------------------------------------------------------
+
+
+def test_refiner_refreshes_cache_and_calls_refit():
+    model = _RecordingRefitStub()
+    cache = TuningCache()
+    wl = get_workload("vecadd")
+    chunked, shared = wl.make_data(256, np.random.default_rng(0))
+    runner = StreamedRunner(wl, chunked, shared)
+    key = cache.key(wl.name, chunked, shared, "host-sync")
+    from repro.core.autotuner import TuneResult
+    stale = TuneResult(StreamConfig(1, 2), 100.0, 0.0, 0.0)
+    cache.put(key, stale)
+
+    refiner = Refiner(model, cache, top_k=2, reps=1)
+    feats = np.zeros(22)
+    res = refiner.refine(runner, key, feats, stale)
+
+    entry = cache.get(key)
+    assert entry is not None and entry.source == "refined"
+    assert entry.config == res.new_config
+    # refined prediction is measured: single-stream speedup of the pick
+    assert entry.predicted_speedup == pytest.approx(res.speedup)
+    assert res.t_single_s > 0 and SINGLE_STREAM in res.measured
+    assert len(model.refit_calls) == 1
+    assert model.refit_calls[0][0] == len(res.measured)
+    assert refiner.history == [res]
+
+
+def test_perf_model_refit_moves_predictions_toward_new_targets():
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((60, 25))
+    y = X[:, 0] * 2.0 + 1.0
+    model = PerformanceModel.train(X, y, epochs=120, seed=0)
+    # the serving-time ground truth disagrees: targets shifted up by 3
+    X_new, y_new = X[:16], y[:16] + 3.0
+    before = float(np.mean((model.predict(X_new) - y_new) ** 2))
+    model.refit(X_new, y_new, epochs=200, lr=3e-3)
+    after = float(np.mean((model.predict(X_new) - y_new) ** 2))
+    assert after < before
+
+
+# -- end-to-end acceptance ---------------------------------------------------
+
+
+def test_end_to_end_adaptive_serving():
+    """Mixed trace of 3 workloads: outputs allclose to host-sync
+    reference, second occurrences all cache hits with no extra model
+    search, and an injected misprediction triggers exactly one refinement
+    that lowers that workload's rolling prediction error."""
+    workloads = ["vecadd", "dotprod", "mvmult"]
+    sched = AdaptiveScheduler(
+        _CalibratedStub(), backend="host-sync",
+        drift=DriftDetector(window=8, threshold=3.0, min_samples=2,
+                            cooldown=2))
+    trace = make_trace(workloads, occurrences=2, seed=0)
+    sched.submit_all(trace)
+    results = sched.run()
+
+    # 1) numerical equivalence with the single-stream host-sync reference
+    for r in results:
+        wl = get_workload(r.request.workload)
+        ref_runner = StreamedRunner(wl, r.request.chunked, r.request.shared,
+                                    backend="host-sync")
+        ref = np.concatenate(
+            [np.asarray(o) for o in ref_runner.dispatch(SINGLE_STREAM)],
+            axis=0)
+        got = np.concatenate([np.asarray(o) for o in r.outputs], axis=0)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-3,
+                                   err_msg=r.request.workload)
+
+    # 2) second occurrence of each workload is a warm cache hit
+    assert [r.cache_hit for r in results] == [False] * 3 + [True] * 3
+    assert sched.stats["model_searches"] == 3
+    assert sched.stats["refinements"] == 0
+
+    # 3) inject a misprediction: poison the vecadd entry so its predicted
+    #    runtime is ~40x too small, then keep serving vecadd traffic
+    poison_req = trace[0]
+    key = sched.cache.key("vecadd", poison_req.chunked, poison_req.shared,
+                          "host-sync", "")
+    entry = sched.cache.get(key)
+    assert entry is not None
+    sched.cache.put(key, dataclasses.replace(
+        entry, predicted_speedup=entry.predicted_speedup * 40.0))
+
+    for seed in range(10, 16):
+        sched.submit(_req("vecadd", rows=256, seed=seed))
+    post = sched.run()
+
+    assert sched.stats["refinements"] == 1          # exactly one
+    refined_at = next(i for i, r in enumerate(post) if r.refined)
+    poisoned = [r.sample.rel_error for r in post[:refined_at + 1]]
+    recovered = [r.sample.rel_error for r in post[refined_at + 1:]]
+    assert recovered, "refinement should leave room for recovery samples"
+    assert np.mean(recovered) < np.mean(poisoned)
+    # the refreshed entry serves warm hits with measured-speedup provenance
+    assert all(r.cache_hit for r in post[refined_at + 1:])
+    assert all(r.sample.source == "refined" for r in post[refined_at + 1:])
+    # still numerically correct after refinement
+    for r in post:
+        wl = get_workload("vecadd")
+        ref_runner = StreamedRunner(wl, r.request.chunked, r.request.shared)
+        ref = np.concatenate(
+            [np.asarray(o) for o in ref_runner.dispatch(SINGLE_STREAM)],
+            axis=0)
+        got = np.concatenate([np.asarray(o) for o in r.outputs], axis=0)
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-3)
+
+
+def test_warm_hit_from_persisted_cache_keeps_drift_alive(tmp_path):
+    """A restarted serving process hits the persisted cache without ever
+    profiling features — the scheduler must re-anchor the single-stream
+    runtime so prediction error (and hence drift refinement) still
+    works."""
+    path = str(tmp_path / "cache.json")
+    first = AdaptiveScheduler(_CalibratedStub(), cache=TuningCache(path))
+    first.submit(_req(seed=0))
+    first.run()
+    first.cache.save()
+
+    restarted = AdaptiveScheduler(
+        _CalibratedStub(), cache=TuningCache(path),
+        drift=DriftDetector(window=4, threshold=3.0, min_samples=2))
+    restarted.submit_all([_req(seed=s) for s in (1, 2)])
+    results = restarted.run()
+    assert all(r.cache_hit for r in results)
+    assert restarted.stats["model_searches"] == 0
+    # the anchor was measured lazily, so predictions and errors exist
+    assert all(r.predicted_s is not None for r in results)
+    assert all(r.sample.rel_error is not None for r in results)
+
+    # a poisoned persisted entry is therefore still refinable
+    key = results[0].sample.key
+    entry = restarted.cache.get(key)
+    restarted.cache.put(key, dataclasses.replace(
+        entry, predicted_speedup=entry.predicted_speedup * 40.0))
+    restarted.submit_all([_req(seed=s) for s in (3, 4, 5)])
+    post = restarted.run()
+    assert restarted.stats["refinements"] == 1
+    assert any(r.refined for r in post)
+
+
+def test_cold_tune_with_infeasible_candidates_falls_back_to_single_stream():
+    sched = AdaptiveScheduler(_CalibratedStub(),
+                              candidates=[StreamConfig(32, 64)])
+    sched.submit(_req(rows=16))
+    (res,) = sched.run()
+    assert res.config == SINGLE_STREAM
+    got = np.concatenate([np.asarray(o) for o in res.outputs], axis=0)
+    assert got.shape[0] == 16
+
+
+def test_make_trace_is_deterministic_and_bucketed():
+    t1 = make_trace(["vecadd", "dotprod"], occurrences=2, seed=3)
+    t2 = make_trace(["vecadd", "dotprod"], occurrences=2, seed=3)
+    assert [r.workload for r in t1] == ["vecadd", "dotprod"] * 2
+    for a, b in zip(t1, t2):
+        np.testing.assert_array_equal(
+            next(iter(a.chunked.values())), next(iter(b.chunked.values())))
+    # same shapes across occurrences => same tuning bucket
+    assert (next(iter(t1[0].chunked.values())).shape
+            == next(iter(t1[2].chunked.values())).shape)
+
+
+def test_heuristic_model_prefers_overlap_without_overhead_blowup():
+    feats = np.zeros(22)
+    feats[19] = 1000.0   # t_transfer_us
+    feats[20] = 1000.0   # t_compute_us
+    m = OverlapHeuristicModel(overhead_s=30e-6)
+    cands = [StreamConfig(1, 1), StreamConfig(1, 4), StreamConfig(8, 64)]
+    preds = m.predict_configs(feats, cands)
+    assert preds[1] > preds[0]       # overlapping 4 tasks beats serial
+    assert preds[1] > preds[2]       # 512 dispatches of overhead lose
