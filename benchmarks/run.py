@@ -7,6 +7,7 @@ run also profiles the 39-program suite).
     PYTHONPATH=src python -m benchmarks.run [--programs a,b] [--datasets N]
     PYTHONPATH=src python -m benchmarks.run --quick    # tiny subset
     PYTHONPATH=src python -m benchmarks.run --compare-backends  # executor A/B
+    PYTHONPATH=src python -m benchmarks.run --serve-concurrent  # engine A/B
 
 A dry-run roofline summary (from benchmarks/data/dryrun/*.json, produced
 by benchmarks/dryrun_sweep.py) is appended when available.
@@ -22,6 +23,16 @@ import time
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(ROOT, "src"))
+
+# CPU-serving thread discipline for the engine A/B: one intra-op thread
+# per request, scale across concurrent requests (the standard production
+# CPU-inference configuration).  Must be set before jaxlib creates its
+# client, hence before the imports below; applies to BOTH engines, so it
+# is a deployment mode, not a thumb on the scale.
+if "--serve-concurrent" in sys.argv:
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_cpu_multi_thread_eigen=false"
+                                 " intra_op_parallelism_threads=1")
 
 import numpy as np  # noqa: E402
 
@@ -162,6 +173,183 @@ def serve_trace(programs=None, *, n_requests: int = 12,
     return rows
 
 
+SERVE_CONCURRENT_PROGRAMS = ["binomial", "deriche", "mri-q"]
+
+
+def _parallel_capacity(programs, scale_index, workers, *,
+                       reps: int = 8) -> float:
+    """Calibrate the box: how much does raw kernel execution speed up
+    when issued from ``workers`` threads instead of one?  Uses the
+    trace's own kernels (compiled + device-resident, min-of-2 trials),
+    so the number is the hardware ceiling the engine is chasing — on a
+    steal-heavy 2-vCPU container this can be well under the thread
+    count, and the engine can't beat physics."""
+    import concurrent.futures
+
+    import jax
+
+    from repro.core.workloads import get_workload
+
+    calls = []
+    for name in programs:
+        wl = get_workload(name)
+        scale = wl.datasets[min(scale_index, len(wl.datasets) - 1)]
+        chunked, shared = wl.make_data(scale, np.random.default_rng(0))
+        jitk = jax.jit(wl.kernel)
+        dev = jax.device_put(chunked)
+        sh = jax.device_put(shared)
+        jax.block_until_ready(jitk(dev, sh))        # compile, untimed
+        calls.append((jitk, dev, sh))
+
+    def one(i):
+        jitk, dev, sh = calls[i % len(calls)]
+        jax.block_until_ready(jitk(dev, sh))
+
+    pool = concurrent.futures.ThreadPoolExecutor(workers)
+    best = 0.0
+    for _ in range(2):
+        t0 = time.perf_counter()
+        for i in range(reps * len(calls)):
+            one(i)
+        t_serial = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        futs = [pool.submit(one, i) for i in range(reps * len(calls))]
+        for f in futs:
+            f.result()
+        t_threaded = time.perf_counter() - t0
+        best = max(best, t_serial / max(t_threaded, 1e-12))
+    pool.shutdown()
+    return best
+
+
+def serve_concurrent_trace(programs=None, *, n_requests: int = 18,
+                           backend: str = "host-sync", window: int = 8,
+                           workers: int | None = None, scale_index: int = 8,
+                           reps: int = 3,
+                           json_path: str = "BENCH_serving.json") -> list[str]:
+    """Long-trace steady-state throughput: the serial AdaptiveScheduler
+    vs the concurrent engine on the SAME mixed multi-tenant trace.
+
+    Fairness protocol:
+      * one intra-op XLA thread (env set at module import) — both
+        engines run the standard CPU-serving thread discipline, so
+        request-level overlap is the only concurrency axis;
+      * a shared decision pass first populates ONE TuningCache and the
+        process-global compile caches — both timed engines then serve
+        all-warm-hit traces with IDENTICAL per-request configs, so the
+        A/B measures the engines, not model noise or compile warmth;
+      * min wall over ``reps`` timed runs per engine (steal-time spikes
+        on shared boxes otherwise decide the result);
+      * a calibration probe reports the box's raw ``workers``-thread
+        kernel-scaling ceiling next to the speedup —
+        ``capacity_fraction`` says how much of the achievable overlap
+        the engine delivers.
+
+    Results land in ``BENCH_serving.json`` — the serving perf
+    trajectory's first point.
+    """
+    from repro.core.autotuner import TuningCache
+    from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
+                               DriftDetector, OverlapHeuristicModel,
+                               TelemetryLog, make_trace)
+
+    programs = programs or SERVE_CONCURRENT_PROGRAMS
+    workers = workers or max(2, min(window, os.cpu_count() or 2))
+    occurrences = -(-n_requests // len(programs))
+    # a lenient drift threshold on BOTH sides: concurrent measured_s is
+    # wall time under contention, and a refinement storm mid-trace would
+    # benchmark the refiner, not the engines
+    cache = TuningCache()
+
+    def sched_kwargs():
+        return dict(backend=backend, cache=cache,
+                    drift=DriftDetector(threshold=1e9),
+                    telemetry=TelemetryLog(), keep_outputs=False)
+
+    def trace():
+        return make_trace(programs, occurrences=occurrences,
+                          scale_index=scale_index)[:n_requests]
+
+    rows = []
+    # shared decision pass: cold-tunes every bucket into the shared
+    # cache and warms the process-global compile caches, untimed
+    decide = AdaptiveScheduler(OverlapHeuristicModel(), **sched_kwargs())
+    decide.submit_all(make_trace(programs, occurrences=1,
+                                 scale_index=scale_index))
+    decide.run()
+
+    def timed(factory):
+        sched = factory()
+        # inherit the decide pass's profiled single-stream anchors: a
+        # long-lived serving process carries these, and without them
+        # every bucket would re-anchor (a measured run + a pool drain in
+        # the engine) inside the timed steady state
+        sched._t_single.update(decide._t_single)
+        sched._feats.update(decide._feats)
+        best = float("inf")
+        # one scheduler across reps: the first rep absorbs per-(bucket,
+        # config) warmups, later reps are pure steady state — min wall
+        # is the steady-state trace time, same protocol for both engines.
+        # telemetry resets per rep so the recorded summary describes ONE
+        # trace pass (matching n_requests), not the sum of all reps
+        for _ in range(reps):
+            sched.telemetry = TelemetryLog()
+            sched.submit_all(trace())
+            t0 = time.perf_counter()
+            sched.run()
+            best = min(best, time.perf_counter() - t0)
+        return best, sched
+
+    serial_wall, serial = timed(
+        lambda: AdaptiveScheduler(OverlapHeuristicModel(),
+                                  **sched_kwargs()))
+    serial_rps = n_requests / serial_wall
+    rows.append(f"serve_concurrent.serial.{backend},"
+                f"{serial_wall/n_requests*1e6:.0f},"
+                f"wall_ms={serial_wall*1e3:.1f},rps={serial_rps:.1f}")
+
+    conc_wall, engine = timed(
+        lambda: ConcurrentScheduler(OverlapHeuristicModel(), window=window,
+                                    workers=workers, **sched_kwargs()))
+    conc_rps = n_requests / conc_wall
+    speedup = serial_wall / max(conc_wall, 1e-12)
+
+    capacity = _parallel_capacity(programs, scale_index, workers)
+    rows.append(f"serve_concurrent.window{window}.{backend},"
+                f"{conc_wall/n_requests*1e6:.0f},"
+                f"wall_ms={conc_wall*1e3:.1f},rps={conc_rps:.1f},"
+                f"ctx_reuses={engine.stats['ctx_reuses']},"
+                f"speedup={speedup:.3f}x")
+    rows.append(f"serve_concurrent.capacity.{workers}threads,"
+                f"{0:.0f},scaling={capacity:.3f}x,"
+                f"capacity_fraction={speedup/max(capacity, 1e-12):.3f}")
+
+    payload = {
+        "programs": programs,
+        "n_requests": n_requests,
+        "backend": backend,
+        "window": window,
+        "workers": workers,
+        "scale_index": scale_index,
+        "reps": reps,
+        "cpu_count": os.cpu_count(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "serial": {"wall_s": serial_wall, "throughput_rps": serial_rps,
+                   **serial.telemetry.summary()},
+        "concurrent": {"wall_s": conc_wall, "throughput_rps": conc_rps,
+                       "ctx_reuses": int(engine.stats["ctx_reuses"]),
+                       **engine.telemetry.summary()},
+        "speedup": speedup,
+        "parallel_capacity": capacity,
+        "capacity_fraction": speedup / max(capacity, 1e-12),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(json_path)), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    rows.append(f"# serving benchmark JSON written to {json_path}")
+    return rows
+
+
 def dryrun_summary() -> list[str]:
     rows = []
     for path in sorted(glob.glob(os.path.join(
@@ -201,7 +389,27 @@ def main() -> None:
     ap.add_argument("--serve-backend", default="host-sync")
     ap.add_argument("--serve-json", default=None,
                     help="write the serving comparison + telemetry JSON")
+    ap.add_argument("--serve-concurrent", action="store_true",
+                    help="serial-vs-concurrent engine throughput on a "
+                         "long mixed trace; writes BENCH_serving.json")
+    ap.add_argument("--serve-window", type=int, default=8,
+                    help="concurrent engine in-flight window")
+    ap.add_argument("--serve-workers", type=int, default=None)
+    ap.add_argument("--serve-scale", type=int, default=8,
+                    help="dataset scale index for the concurrent trace")
     args = ap.parse_args()
+
+    if args.serve_concurrent:
+        print("name,us_per_call,derived")
+        for row in serve_concurrent_trace(
+                args.programs.split(",") if args.programs else None,
+                n_requests=args.serve_requests,
+                backend=args.serve_backend,
+                window=args.serve_window, workers=args.serve_workers,
+                scale_index=args.serve_scale,
+                json_path=args.serve_json or "BENCH_serving.json"):
+            print(row)
+        return
 
     if args.compare_backends:
         print("name,us_per_call,derived")

@@ -28,10 +28,12 @@ Adding a backend::
 from __future__ import annotations
 
 from repro.core.backends.base import (ExecutionContext, StreamBackend,
-                                      memoized_jit, split_arrays)
+                                      dispatch_plan, memoized_jit,
+                                      slice_rows, split_arrays)
 from repro.core.backends.host_pipelined import PipelinedHostBackend
 from repro.core.backends.host_sync import SyncHostBackend
-from repro.core.backends.host_threads import ThreadedHostBackend
+from repro.core.backends.host_threads import ThreadedHostBackend, \
+    WindowedPool
 from repro.core.backends.mesh import MeshBackend
 
 _BACKENDS: dict[str, StreamBackend] = {}
@@ -75,6 +77,7 @@ register_backend(MeshBackend())
 
 __all__ = [
     "ExecutionContext", "StreamBackend", "memoized_jit", "split_arrays",
+    "dispatch_plan", "slice_rows", "WindowedPool",
     "SyncHostBackend", "PipelinedHostBackend", "ThreadedHostBackend",
     "MeshBackend",
     "register_backend", "get_backend", "list_backends",

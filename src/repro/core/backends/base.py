@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import threading
 from typing import Any, Callable, Optional
 
 import jax
@@ -36,6 +37,10 @@ import numpy as np
 # every compiled executable behind it) without bound.
 _JIT_MEMO: dict = {}
 _JIT_MEMO_MAX = 256
+# miss-path lock: backends run on pool worker threads (host-threads, the
+# concurrent serving engine), and an unguarded evict-while-full loop lets
+# two threads pop the same key
+_MEMO_LOCK = threading.Lock()
 
 
 def memoized_jit(kernel: Callable, *, donate: bool = False) -> Callable:
@@ -45,15 +50,19 @@ def memoized_jit(kernel: Callable, *, donate: bool = False) -> Callable:
     except TypeError:          # unhashable callable: no memoization
         return (jax.jit(kernel, donate_argnums=0) if donate
                 else jax.jit(kernel))
-    if entry is None:
-        while len(_JIT_MEMO) >= _JIT_MEMO_MAX:
-            _JIT_MEMO.pop(next(iter(_JIT_MEMO)))
-        entry = _JIT_MEMO[kernel] = {}
     key = "donate" if donate else "plain"
-    if key not in entry:
-        entry[key] = (jax.jit(kernel, donate_argnums=0) if donate
-                      else jax.jit(kernel))
-    return entry[key]
+    if entry is not None and key in entry:
+        return entry[key]
+    with _MEMO_LOCK:
+        entry = _JIT_MEMO.get(kernel)
+        if entry is None:
+            while len(_JIT_MEMO) >= _JIT_MEMO_MAX:
+                _JIT_MEMO.pop(next(iter(_JIT_MEMO)), None)
+            entry = _JIT_MEMO[kernel] = {}
+        if key not in entry:
+            entry[key] = (jax.jit(kernel, donate_argnums=0) if donate
+                          else jax.jit(kernel))
+        return entry[key]
 
 
 def split_arrays(arrs: dict, n: int) -> list[dict]:
@@ -63,6 +72,60 @@ def split_arrays(arrs: dict, n: int) -> list[dict]:
     keys = list(arrs)
     pieces = {k: np.array_split(arrs[k], n) for k in keys}
     return [{k: pieces[k][i] for k in keys} for i in range(n)]
+
+
+# Dispatch-plan cache: the (start, stop) row ranges of every task and
+# partition slice depend only on (row count, config), yet the backends used
+# to re-derive them through nested ``np.array_split`` calls on every
+# dispatch.  Serving traffic repeats the same few (shape-bucket, config)
+# pairs thousands of times, so the boundaries are memoized here and the
+# arrays sliced directly — the hot-path cost per dispatch drops to plain
+# ``a[lo:hi]`` views.
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_MAX = 4096
+
+
+def _split_bounds(lo: int, hi: int, n: int) -> list[tuple[int, int]]:
+    """(start, stop) ranges identical to ``np.array_split`` of hi-lo rows
+    into n pieces (first ``rem`` pieces get the extra row)."""
+    total = hi - lo
+    base, rem = divmod(total, n)
+    bounds = []
+    start = lo
+    for i in range(n):
+        size = base + (1 if i < rem else 0)
+        bounds.append((start, start + size))
+        start += size
+    return bounds
+
+
+def dispatch_plan(n_rows: int, config) -> tuple:
+    """Memoized slicing plan for one dispatch: a tuple of tasks, each a
+    tuple of global (start, stop) partition row ranges — task-major,
+    partition-minor, byte-identical boundaries to the nested
+    ``split_arrays`` the backends used to compute per call.
+
+    Thread-safe: backends dispatch from pool workers, so the eviction
+    loop runs under the shared memo lock (the hit path stays lock-free —
+    a racy ``get`` of an immutable tuple is fine)."""
+    key = (n_rows, config.partitions, config.tasks)
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        with _MEMO_LOCK:
+            plan = _PLAN_CACHE.get(key)
+            if plan is None:
+                while len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+                    _PLAN_CACHE.pop(next(iter(_PLAN_CACHE)), None)
+                plan = tuple(
+                    tuple(_split_bounds(t_lo, t_hi, config.partitions))
+                    for t_lo, t_hi in _split_bounds(0, n_rows, config.tasks))
+                _PLAN_CACHE[key] = plan
+    return plan
+
+
+def slice_rows(arrs: dict, lo: int, hi: int) -> dict:
+    """Row-range view of every array in the dict (no copies)."""
+    return {k: a[lo:hi] for k, a in arrs.items()}
 
 
 @dataclasses.dataclass
@@ -88,6 +151,25 @@ class ExecutionContext:
         return cls(kernel=kernel, chunked=chunked, shared=shared,
                    device=device, jit_kernel=memoized_jit(kernel),
                    shared_dev=shared_dev)
+
+    def swap_buffers(self, chunked: dict, shared: dict) -> "ExecutionContext":
+        """Re-point this context at a new request's data, keeping the
+        jitted handles and device.
+
+        The shared-buffer H2D transfer is semantically required when the
+        new request carries shared data (its values differ), but a
+        workload with an empty shared dict pays nothing — which is what
+        makes pooling contexts cheaper than rebuilding them: creation
+        always round-trips through ``device_put`` + ``block_until_ready``,
+        a swap only does when there is something to ship."""
+        self.chunked = chunked
+        self.shared = shared
+        if shared:
+            self.shared_dev = jax.device_put(shared, self.device)
+            jax.block_until_ready(self.shared_dev)
+        else:
+            self.shared_dev = {}
+        return self
 
     @property
     def donating_jit(self) -> Callable:

@@ -27,7 +27,7 @@ import warnings
 import jax
 
 from repro.core.backends.base import ExecutionContext, StreamBackend, \
-    split_arrays
+    dispatch_plan, slice_rows
 
 
 class PipelinedHostBackend(StreamBackend):
@@ -39,9 +39,10 @@ class PipelinedHostBackend(StreamBackend):
         self.depth = depth
 
     def dispatch(self, ctx: ExecutionContext, config) -> list:
-        # host-side slicing plan: tasks x partitions, cut once, up front
-        plans = [split_arrays(task, config.partitions)
-                 for task in split_arrays(ctx.chunked, config.tasks)]
+        # host-side slicing plan: tasks x partitions, memoized boundaries,
+        # each slice a view cut straight from the host arrays
+        n_rows = next(iter(ctx.chunked.values())).shape[0]
+        plans = dispatch_plan(n_rows, config)
         kernel = ctx.donating_jit
 
         staged: collections.deque = collections.deque()
@@ -49,8 +50,9 @@ class PipelinedHostBackend(StreamBackend):
         outs: list = []
 
         def stage(idx: int) -> None:
-            staged.append([jax.device_put(p, ctx.device)  # async H2D
-                           for p in plans[idx]])
+            staged.append([jax.device_put(slice_rows(ctx.chunked, lo, hi),
+                                          ctx.device)  # async H2D
+                           for lo, hi in plans[idx]])
 
         with warnings.catch_warnings():
             # CPU ignores donation; silence its per-call warning.

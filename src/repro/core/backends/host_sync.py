@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 
 from repro.core.backends.base import ExecutionContext, StreamBackend, \
-    split_arrays
+    dispatch_plan, slice_rows
 
 
 class SyncHostBackend(StreamBackend):
@@ -26,9 +26,15 @@ class SyncHostBackend(StreamBackend):
     kind = "runner"
 
     def dispatch(self, ctx: ExecutionContext, config) -> list:
+        n_rows = next(iter(ctx.chunked.values())).shape[0]
         outs = []
-        for task in split_arrays(ctx.chunked, config.tasks):
+        for parts in dispatch_plan(n_rows, config):
+            t_lo = parts[0][0]
+            task = slice_rows(ctx.chunked, t_lo, parts[-1][1])
             task_dev = jax.device_put(task, ctx.device)     # async H2D
-            for part in split_arrays(task_dev, config.partitions):
+            # partition slicing still happens on the DEVICE chunk — the
+            # deliberate seed flaw the pipelined sibling fixes
+            for p_lo, p_hi in parts:
+                part = slice_rows(task_dev, p_lo - t_lo, p_hi - t_lo)
                 outs.append(ctx.jit_kernel(part, ctx.shared_dev))
         return outs

@@ -13,21 +13,73 @@ Ordering contract: outputs are collected into a task-indexed slot table,
 so the returned list is task-major, partition-minor regardless of the
 completion order of the workers.
 
-The in-flight ``window`` bounds how many tasks can be submitted but not
-yet retired — the same live-buffer bound the pipelined backend gets from
-its depth-``d`` deque, enforced here by blocking the submitting thread on
-the oldest outstanding future.
+The pool machinery lives in :class:`WindowedPool` so other consumers —
+the concurrent serving engine (:mod:`repro.serving.engine`) overlaps
+whole *requests* on the same primitive — get the lazy executor and the
+bounded-window discipline without reimplementing it.
 """
 from __future__ import annotations
 
 import collections
-from concurrent.futures import ThreadPoolExecutor
-from typing import Optional
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Optional, Sequence
 
 import jax
 
 from repro.core.backends.base import ExecutionContext, StreamBackend, \
-    split_arrays
+    dispatch_plan, slice_rows
+
+
+class WindowedPool:
+    """A lazily created thread pool plus a bounded in-flight window.
+
+    ``window`` bounds how many submitted items may be un-retired at once
+    — the live-buffer bound the pipelined backend gets from its
+    depth-``d`` deque, enforced here by blocking the submitting thread on
+    the oldest outstanding future.
+    """
+
+    def __init__(self, workers: int = 4, window: int = 8,
+                 name: str = "windowed-pool"):
+        assert workers >= 1 and window >= 1, (workers, window)
+        self.workers = workers
+        self.window = window
+        self.name = name
+        self._pool: Optional[ThreadPoolExecutor] = None
+
+    def executor(self) -> ThreadPoolExecutor:
+        # lazy: module import registers backend instances, and spawning
+        # threads at import time would cost every process that never
+        # dispatches
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.workers, thread_name_prefix=self.name)
+        return self._pool
+
+    def submit(self, fn: Callable, *args) -> Future:
+        return self.executor().submit(fn, *args)
+
+    def run_ordered(self, fn: Callable, items: Sequence) -> list:
+        """``[fn(x) for x in items]`` on the pool: submission order, at
+        most ``window`` in flight, results in item order regardless of
+        completion order."""
+        pool = self.executor()
+        results: list = [None] * len(items)
+        inflight: collections.deque = collections.deque()
+        for i, item in enumerate(items):
+            while len(inflight) >= self.window:
+                j, fut = inflight.popleft()
+                results[j] = fut.result()
+            inflight.append((i, pool.submit(fn, item)))
+        while inflight:
+            j, fut = inflight.popleft()
+            results[j] = fut.result()
+        return results
+
+    def shutdown(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
 
 
 class ThreadedHostBackend(StreamBackend):
@@ -35,41 +87,22 @@ class ThreadedHostBackend(StreamBackend):
     kind = "runner"
 
     def __init__(self, workers: int = 4, window: int = 8):
-        assert workers >= 1 and window >= 1, (workers, window)
+        self.pool = WindowedPool(workers, window, name="host-threads")
         self.workers = workers
         self.window = window
-        self._pool: Optional[ThreadPoolExecutor] = None
-
-    def _executor(self) -> ThreadPoolExecutor:
-        # lazy: module import registers the instance, and spawning threads
-        # at import time would cost every process that never dispatches
-        if self._pool is None:
-            self._pool = ThreadPoolExecutor(
-                max_workers=self.workers,
-                thread_name_prefix="host-threads")
-        return self._pool
 
     def dispatch(self, ctx: ExecutionContext, config) -> list:
-        plans = [split_arrays(task, config.partitions)
-                 for task in split_arrays(ctx.chunked, config.tasks)]
+        n_rows = next(iter(ctx.chunked.values())).shape[0]
+        plans = dispatch_plan(n_rows, config)
 
         def issue(parts):
-            devs = [jax.device_put(p, ctx.device) for p in parts]
+            devs = [jax.device_put(slice_rows(ctx.chunked, lo, hi),
+                                   ctx.device) for lo, hi in parts]
             outs = [ctx.jit_kernel(pd, ctx.shared_dev) for pd in devs]
             # retire inside the worker: a completed future means the
             # task's buffers are no longer accumulating in flight
             jax.block_until_ready(outs)
             return outs
 
-        pool = self._executor()
-        results: list = [None] * len(plans)
-        inflight: collections.deque = collections.deque()
-        for i, parts in enumerate(plans):
-            while len(inflight) >= self.window:
-                j, fut = inflight.popleft()
-                results[j] = fut.result()
-            inflight.append((i, pool.submit(issue, parts)))
-        while inflight:
-            j, fut = inflight.popleft()
-            results[j] = fut.result()
+        results = self.pool.run_ordered(issue, plans)
         return [o for task_outs in results for o in task_outs]

@@ -157,4 +157,37 @@ def config_features(partitions: int, tasks: int) -> np.ndarray:
     ], dtype=np.float64)
 
 
+# Candidate grids are immutable per scheduler/tuner, so their encodings —
+# and the raw (partitions, tasks) columns the vectorized heuristic model
+# scores — are memoized by the grid's value.  Coordinator-thread only:
+# decide/tune never runs on pool workers.
+_CONFIG_MATRIX_CACHE: dict = {}
+_CONFIG_MATRIX_CACHE_MAX = 64
+
+
+def _config_memo(kind: str, configs, build):
+    key = (kind, tuple((c.partitions, c.tasks) for c in configs))
+    hit = _CONFIG_MATRIX_CACHE.get(key)
+    if hit is None:
+        while len(_CONFIG_MATRIX_CACHE) >= _CONFIG_MATRIX_CACHE_MAX:
+            _CONFIG_MATRIX_CACHE.pop(next(iter(_CONFIG_MATRIX_CACHE)))
+        hit = _CONFIG_MATRIX_CACHE[key] = build()
+    return hit
+
+
+def config_feature_matrix(configs) -> np.ndarray:
+    """(C, N_CONFIG_FEATURES) encoding of a candidate grid, memoized."""
+    return _config_memo("enc", configs, lambda: np.stack(
+        [config_features(c.partitions, c.tasks) for c in configs]))
+
+
+def config_pt_arrays(configs) -> tuple[np.ndarray, np.ndarray]:
+    """The (partitions, tasks) columns of a candidate grid as float
+    arrays, memoized — the vectorized overlap heuristic scores the whole
+    grid with these instead of a Python loop."""
+    return _config_memo("pt", configs, lambda: (
+        np.array([c.partitions for c in configs], dtype=np.float64),
+        np.array([c.tasks for c in configs], dtype=np.float64)))
+
+
 N_CONFIG_FEATURES = 3

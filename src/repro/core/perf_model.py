@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.features import N_CONFIG_FEATURES, config_features
+from repro.core.features import config_feature_matrix
 
 # ---------------------------------------------------------------------------
 # Feature pipeline
@@ -180,17 +180,25 @@ class PerformanceModel:
 
     def predict_configs(self, prog_feats: np.ndarray,
                         configs) -> np.ndarray:
-        """Rank many configs for one program (the runtime search core)."""
-        rows = [np.concatenate([prog_feats,
-                                config_features(c.partitions, c.tasks)])
-                for c in configs]
-        return self.predict(np.stack(rows))
+        """Rank many configs for one or many programs (the runtime search
+        core).  ``prog_feats`` may be a single ``(F,)`` feature vector —
+        returns ``(C,)`` predictions — or a ``(B, F)`` matrix of programs
+        — returns ``(B, C)``, one MLP forward for the whole batch (the
+        serving engine's batched cold path)."""
+        P = np.atleast_2d(np.asarray(prog_feats, dtype=np.float64))
+        rows = assemble_rows(P, configs)
+        preds = self.predict(rows).reshape(P.shape[0], len(configs))
+        return preds[0] if np.ndim(prog_feats) == 1 else preds
 
 
 def assemble_rows(prog_feats: np.ndarray, configs) -> np.ndarray:
-    return np.stack([
-        np.concatenate([prog_feats, config_features(c.partitions, c.tasks)])
-        for c in configs])
+    """Program features ++ config encodings, vectorized: ``(F,)`` input
+    yields ``(C, F+3)`` rows; ``(B, F)`` input yields ``(B*C, F+3)`` rows
+    grouped program-major."""
+    P = np.atleast_2d(np.asarray(prog_feats, dtype=np.float64))
+    C = config_feature_matrix(configs)
+    return np.concatenate([np.repeat(P, len(configs), axis=0),
+                           np.tile(C, (P.shape[0], 1))], axis=1)
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,39 @@ def search_best(
     return picks, preds, dt
 
 
+def search_best_batch(
+    model: PerformanceModel,
+    feats_matrix: np.ndarray,
+    candidates: Optional[Sequence[StreamConfig]] = None,
+    *,
+    feasible: Optional[np.ndarray] = None,
+):
+    """Rank the candidate grid for ``B`` programs with ONE batched
+    ``predict_configs`` call over a ``(B, F)`` feature matrix.
+
+    ``feasible`` is an optional ``(B, C)`` bool mask; a row's infeasible
+    candidates (e.g. unsplittable for that request's row count) are
+    scored ``-inf``, which — with the same stable descending sort as
+    :func:`search_best` — makes each row's pick identical to a serial
+    ``search_best`` over that row's filtered candidate list.
+
+    Returns ``(picks, best_preds, preds, seconds)``: per-program best
+    config, its predicted speedup, the full ``(B, C)`` prediction
+    matrix, and the search wall time.
+    """
+    candidates = list(candidates or default_space())
+    F = np.atleast_2d(np.asarray(feats_matrix, dtype=np.float64))
+    t0 = time.perf_counter()
+    preds = np.atleast_2d(np.asarray(model.predict_configs(F, candidates)))
+    dt = time.perf_counter() - t0
+    scored = preds if feasible is None else np.where(feasible, preds,
+                                                     -np.inf)
+    order = np.argsort(-scored, axis=1, kind="stable")
+    picks = [candidates[order[b, 0]] for b in range(F.shape[0])]
+    best_preds = scored[np.arange(F.shape[0]), order[:, 0]]
+    return picks, best_preds, preds, dt
+
+
 def simulated_annealing(
     objective: Callable[[StreamConfig], float],
     *,

@@ -26,6 +26,16 @@ from repro.core.workloads import Workload
 _split = split_arrays
 
 
+def readback_outputs(outs: list) -> None:
+    """Materialize EVERY output leaf on the host (paper Fig 8c: results
+    transferred back).  Reading only the first leaf — the old behavior —
+    undercounts D2H time on multi-output kernels, so every measured
+    runtime (``run``, the serving execute stage) routes through here."""
+    for o in outs:
+        for leaf in jax.tree.leaves(o):
+            np.asarray(leaf, copy=False)
+
+
 class StreamedRunner:
     """Executes one workload+dataset under arbitrary stream configs.
 
@@ -36,7 +46,8 @@ class StreamedRunner:
     """
 
     def __init__(self, wl: Workload, chunked: dict, shared: dict,
-                 device=None, backend: Union[str, StreamBackend] = "host-sync"):
+                 device=None, backend: Union[str, StreamBackend] = "host-sync",
+                 ctx: Union[ExecutionContext, None] = None):
         self.wl = wl
         self.chunked = chunked
         self.shared = shared
@@ -46,8 +57,11 @@ class StreamedRunner:
             raise ValueError(
                 f"backend {self.backend.name!r} is a {self.backend.kind} "
                 f"backend, not a runner")
-        self.ctx = ExecutionContext.create(wl.kernel, chunked, shared,
-                                           device)
+        # a caller holding a pooled ExecutionContext (the serving engine's
+        # per-workload context pool) wraps it instead of paying create()'s
+        # shared-buffer upload again
+        self.ctx = ctx if ctx is not None else ExecutionContext.create(
+            wl.kernel, chunked, shared, device)
         self.device = self.ctx.device
         # legacy attribute names, still used by feature extraction
         self._jit = self.ctx.jit_kernel
@@ -78,9 +92,8 @@ class StreamedRunner:
             t0 = time.perf_counter()
             outs = self._dispatch(config)
             # read back (paper Fig 8c: results transferred to host)
-            for o in outs:
-                jax.block_until_ready(o)
-            _ = [np.asarray(jax.tree.leaves(o)[0], copy=False) for o in outs]
+            jax.block_until_ready(outs)
+            readback_outputs(outs)
             best = min(best, time.perf_counter() - t0)
         return best
 

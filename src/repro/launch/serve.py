@@ -129,31 +129,40 @@ def adaptive_serve(
     telemetry_path: Optional[str] = None,
     cache_path: Optional[str] = None,
     drift_threshold: float = 4.0,
+    window: int = 1,
+    workers: Optional[int] = None,
     seed: int = 0,
     verbose: bool = True,
 ) -> dict:
     """Serve ``n_requests`` of a mixed multi-tenant trace adaptively.
 
-    Returns the telemetry summary dict (requests, hit rate, refinements,
-    mean prediction error); the per-request JSONL stream lands at
-    ``telemetry_path`` when given, and new tuning-cache entries persist
-    to ``cache_path``.
+    ``window > 1`` serves through the concurrent engine with that many
+    requests in flight (drift thresholds then judge wall time under
+    contention — keep them loose).  Returns the telemetry summary dict
+    (requests, hit rate, refinements, mean prediction error); the
+    per-request JSONL stream lands at ``telemetry_path`` when given, and
+    new tuning-cache entries persist to ``cache_path``.
     """
     from repro.core.autotuner import TuningCache
-    from repro.serving import (AdaptiveScheduler, DriftDetector,
-                               OverlapHeuristicModel, TelemetryLog,
-                               make_trace)
+    from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
+                               DriftDetector, OverlapHeuristicModel,
+                               TelemetryLog, make_trace)
 
     occurrences = -(-n_requests // len(workloads))  # ceil
     trace = make_trace(list(workloads), occurrences=occurrences,
                        seed=seed)[:n_requests]
-    sched = AdaptiveScheduler(
-        OverlapHeuristicModel(),
+    common = dict(
         backend=backend, policy=policy,
         cache=TuningCache(cache_path),
         telemetry=TelemetryLog(telemetry_path),
         drift=DriftDetector(threshold=drift_threshold),
         keep_outputs=False)
+    if window > 1:
+        sched = ConcurrentScheduler(OverlapHeuristicModel(),
+                                    window=window, workers=workers,
+                                    **common)
+    else:
+        sched = AdaptiveScheduler(OverlapHeuristicModel(), **common)
     sched.submit_all(trace)
     t0 = time.perf_counter()
     results = sched.run()
@@ -173,6 +182,8 @@ def adaptive_serve(
     summary["wall_s"] = wall
     summary["backend"] = backend
     summary["policy"] = policy
+    summary["window"] = window
+    summary["throughput_rps"] = n_requests / max(wall, 1e-12)
     if cache_path:
         sched.cache.save()
     sched.telemetry.close()
@@ -200,6 +211,11 @@ def main() -> None:
                     help="append-only JSONL telemetry path")
     ap.add_argument("--tuning-cache", default=None,
                     help="persistent tuning-cache JSON path")
+    ap.add_argument("--window", type=int, default=1,
+                    help="in-flight request window; >1 serves through "
+                         "the concurrent engine")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="concurrent engine pool size (default: window)")
     args = ap.parse_args()
 
     if args.adaptive:
@@ -207,7 +223,8 @@ def main() -> None:
             args.workloads.split(","),
             n_requests=args.requests, backend=args.backend,
             policy=args.policy, telemetry_path=args.telemetry,
-            cache_path=args.tuning_cache)
+            cache_path=args.tuning_cache, window=args.window,
+            workers=args.workers)
         print(json.dumps(summary, indent=2))
         return
 

@@ -9,20 +9,28 @@ Lifecycle per request (see README "Adaptive serving"):
   every dispatch → telemetry (predicted vs measured) → drift detector
   drift → refiner: re-profile small candidate set, refresh cache entry,
           incremental model refit
+
+The serial :class:`AdaptiveScheduler` runs that pipeline one request at
+a time; :class:`ConcurrentScheduler` (``engine.py``) overlaps up to
+``window`` requests on a bounded worker pool with batched cold-path
+model searches and pooled execution contexts.
 """
+from repro.serving.engine import (ConcurrentScheduler, ContextPool,
+                                  OrderedRetirer)
 from repro.serving.queue import POLICIES, RequestQueue, WorkloadRequest
 from repro.serving.refinement import (DriftDetector, RefinementResult,
                                       Refiner)
 from repro.serving.scheduler import (AdaptiveScheduler,
-                                     OverlapHeuristicModel, RequestResult,
-                                     make_trace)
+                                     OverlapHeuristicModel, PendingRequest,
+                                     RequestResult, make_trace)
 from repro.serving.telemetry import (TelemetryLog, TelemetrySample,
                                      relative_error)
 
 __all__ = [
     "POLICIES", "RequestQueue", "WorkloadRequest",
     "DriftDetector", "RefinementResult", "Refiner",
-    "AdaptiveScheduler", "OverlapHeuristicModel", "RequestResult",
-    "make_trace",
+    "AdaptiveScheduler", "OverlapHeuristicModel", "PendingRequest",
+    "RequestResult", "make_trace",
+    "ConcurrentScheduler", "ContextPool", "OrderedRetirer",
     "TelemetryLog", "TelemetrySample", "relative_error",
 ]

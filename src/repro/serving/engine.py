@@ -1,0 +1,262 @@
+"""The concurrent serving engine: overlapped request execution on a
+bounded worker pool.
+
+The serial :class:`~repro.serving.scheduler.AdaptiveScheduler` chains
+every request's millisecond *execution* behind the previous one, even
+though the paper's whole point (§3.3) is that the placement *decision* is
+microseconds.  This engine splits the per-request pipeline into the three
+stages the scheduler already exposes and overlaps them across requests:
+
+  decide    coordinator thread: queue pop (policy order), cache lookup,
+            and — for the cold requests of a window fill — ONE batched
+            model search over a ``(B, F)`` feature matrix
+            (:meth:`AdaptiveScheduler._tune_cold_batch`);
+  dispatch  a bounded worker pool (the ``host-threads`` backend's
+            :class:`~repro.core.backends.host_threads.WindowedPool`
+            machinery) executes up to ``window`` requests concurrently;
+  retire    coordinator thread: completions are collected out of order,
+            but telemetry / drift observation for each tuning bucket is
+            flushed in that bucket's dispatch order
+            (:class:`OrderedRetirer`), so the drift detector sees the
+            same per-bucket sample sequence a serial pass would.
+
+Ordering guarantees:
+  * decisions (and therefore config choices) happen in queue-policy
+    order, identical to the serial scheduler;
+  * ``run()`` returns results in decision order;
+  * telemetry ``seq`` reflects retirement order — out of order across
+    buckets, dispatch-ordered within each bucket.
+
+The dispatch hot path is amortized two ways: partition slicing plans are
+memoized per (row-count, config) in :mod:`repro.core.backends.base`, and
+:class:`ContextPool` recycles ``ExecutionContext`` objects per workload,
+swapping in each request's buffers instead of rebuilding a
+:class:`StreamedRunner` (an empty shared dict then costs zero H2D).
+
+Measurement discipline: cold-path profiling (feature extraction, the
+single-stream anchor of a persisted warm hit) drains the in-flight
+window first, so the numbers persisted into the tuning cache and the
+prediction anchor are measured on an idle pool.  ``measured_s`` itself,
+though, is wall time under concurrency — contention inflates it relative
+to an isolated run, so drift thresholds should be looser than in serial
+mode (refinement re-profiles on the coordinator while workers keep
+executing).
+"""
+from __future__ import annotations
+
+import collections
+import sys
+from concurrent.futures import FIRST_COMPLETED, wait
+from typing import Optional
+
+from repro.core.backends import ExecutionContext
+from repro.core.backends.host_threads import WindowedPool
+from repro.core.streams import StreamedRunner
+from repro.core.workloads import get_workload
+from repro.serving.queue import WorkloadRequest
+from repro.serving.scheduler import (AdaptiveScheduler, PendingRequest,
+                                     RequestResult)
+
+
+class ContextPool:
+    """Per-workload free lists of reusable :class:`ExecutionContext`\\ s.
+
+    Concurrent requests of the same workload each lease their own
+    context (their chunked/shared buffers differ); a released context is
+    recycled for the next lease with
+    :meth:`ExecutionContext.swap_buffers`."""
+
+    def __init__(self, device=None):
+        self.device = device
+        self._free: dict[str, list[ExecutionContext]] = {}
+        self.leases = 0
+        self.reuses = 0
+
+    def lease(self, wl, chunked: dict, shared: dict) -> ExecutionContext:
+        self.leases += 1
+        free = self._free.get(wl.name)
+        if free:
+            self.reuses += 1
+            return free.pop().swap_buffers(chunked, shared)
+        return ExecutionContext.create(wl.kernel, chunked, shared,
+                                       self.device)
+
+    def release(self, name: str, ctx: ExecutionContext) -> None:
+        self._free.setdefault(name, []).append(ctx)
+
+
+class OrderedRetirer:
+    """Buffers out-of-order completions so each bucket retires in its own
+    dispatch order.
+
+    ``issue(key)`` stamps a dispatch index for the bucket;
+    ``complete(key, idx, payload)`` hands back every payload that is now
+    retirable — i.e. the contiguous run of completions starting at the
+    bucket's next-unretired index.  Deterministic: for ANY completion
+    order of a fixed dispatch sequence, the concatenation of returned
+    payload lists per bucket is that bucket's dispatch order."""
+
+    def __init__(self):
+        self._issued: collections.Counter = collections.Counter()
+        self._next: collections.Counter = collections.Counter()
+        self._held: dict = {}
+
+    def issue(self, key: str) -> int:
+        idx = self._issued[key]
+        self._issued[key] += 1
+        return idx
+
+    def complete(self, key: str, idx: int, payload) -> list:
+        self._held[(key, idx)] = payload
+        ready = []
+        while (key, self._next[key]) in self._held:
+            ready.append(self._held.pop((key, self._next[key])))
+            self._next[key] += 1
+        return ready
+
+    @property
+    def held(self) -> int:
+        return len(self._held)
+
+
+class ConcurrentScheduler(AdaptiveScheduler):
+    """Adaptive scheduler with up to ``window`` requests in flight.
+
+    ``window=1`` degenerates to the serial scheduler (same stages, same
+    results, one extra thread hop).  Decisions, cold tuning, and
+    retirement all run on the coordinating thread; only the execute
+    stage — warmup, dispatch, block, D2H read-back — runs on pool
+    workers, so all scheduler state mutation stays single-threaded."""
+
+    def __init__(self, model, *, window: int = 4,
+                 workers: Optional[int] = None, **kwargs):
+        super().__init__(model, **kwargs)
+        assert window >= 1, window
+        self.window = window
+        self.workers = workers if workers is not None else window
+        self.pool = WindowedPool(self.workers, window, name="serve-engine")
+        self.ctx_pool = ContextPool()
+        self.retirer = OrderedRetirer()
+
+    # -- pooled runners -------------------------------------------------------
+
+    def _make_runner(self, req: WorkloadRequest) -> StreamedRunner:
+        wl = get_workload(req.workload)
+        ctx = self.ctx_pool.lease(wl, req.chunked, req.shared)
+        return StreamedRunner(wl, req.chunked, req.shared,
+                              backend=self.backend_name, ctx=ctx)
+
+    def _release_runner(self, runner: StreamedRunner) -> None:
+        self.ctx_pool.release(runner.wl.name, runner.ctx)
+
+    # -- the overlapped serving loop ------------------------------------------
+
+    def run(self, max_requests: Optional[int] = None) -> list[RequestResult]:
+        """Drain the queue with up to ``window`` requests in flight;
+        returns results in decision (queue-policy) order."""
+        # the coordinator contends for the GIL with busy workers; at the
+        # default 5 ms switch interval a retire-and-refill cycle can
+        # stall long enough to starve the pool, so run with a tighter
+        # interval (restored on exit) — the same knob threaded Python
+        # servers tune
+        prev_switch = sys.getswitchinterval()
+        sys.setswitchinterval(min(prev_switch, 1e-3))
+        try:
+            return self._run(max_requests)
+        finally:
+            sys.setswitchinterval(prev_switch)
+
+    def _retire_completed(self, done, inflight: dict,
+                          results: dict) -> Optional[BaseException]:
+        """Retire a set of completed futures, flushing each touched
+        bucket's contiguous dispatch-order run.  A future that raised
+        still advances its bucket (a poisoned slot would hold every
+        later completion of that bucket forever) and releases its
+        context before the error is reported; the first error seen is
+        returned rather than raised so the caller can drain the rest."""
+        error: Optional[BaseException] = None
+        for fut in done:
+            p = inflight.pop(fut)
+            try:
+                payload = (p, *fut.result())
+            except BaseException as e:
+                self._release_runner(p.runner)
+                payload = None
+                if error is None:
+                    error = e
+            for flushed in self.retirer.complete(p.key, p.bucket_idx,
+                                                 payload):
+                if flushed is None:          # the failed slot itself
+                    continue
+                rp, routs, rmeasured = flushed
+                results[rp.order] = self._retire(rp, routs, rmeasured)
+                self._release_runner(rp.runner)
+        return error
+
+    def _drain(self, inflight: dict,
+               results: dict) -> Optional[BaseException]:
+        """Retire everything in flight; returns the first error seen."""
+        error = None
+        while inflight:
+            done, _ = wait(inflight, return_when=FIRST_COMPLETED)
+            error = self._retire_completed(done, inflight,
+                                           results) or error
+        return error
+
+    def _run(self, max_requests: Optional[int]) -> list[RequestResult]:
+        results: dict[int, RequestResult] = {}
+        inflight: dict = {}                  # future -> PendingRequest
+        decided = 0
+
+        def budget_left() -> bool:
+            return max_requests is None or decided < max_requests
+
+        def check(error: Optional[BaseException]) -> None:
+            if error is not None:
+                # finish the survivors cleanly, then surface the failure
+                self._drain(inflight, results)
+                raise error
+
+        while (self.queue and budget_left()) or inflight:
+            # decide: fill the free window slots in queue-policy order
+            batch: list[PendingRequest] = []
+            while (self.queue and budget_left()
+                   and len(inflight) + len(batch) < self.window):
+                batch.append(self._decide(self.queue.pop()))
+                decided += 1
+            # batched cold path: one model search for every cold bucket
+            # in this fill, measured on a quiesced pool — profiling
+            # (cold features, single-stream anchors) on a busy pool
+            # would persist contention-skewed numbers into the tuning
+            # cache and the prediction anchor
+            colds = [p for p in batch if p.entry is None]
+            anchors = [p for p in batch if p.needs_anchor]
+            if colds or anchors:
+                check(self._drain(inflight, results))
+            for p in anchors:
+                self._measure_anchor(p)
+            if len(colds) == 1:
+                self._tune_cold(colds[0])
+            elif colds:
+                self._tune_cold_batch(colds)
+            # dispatch
+            for p in batch:
+                p.bucket_idx = self.retirer.issue(p.key)
+                inflight[self.pool.submit(self._execute, p)] = p
+            if not inflight:
+                continue
+            # retire whatever completed first (out of order)
+            done, _ = wait(inflight, return_when=FIRST_COMPLETED)
+            check(self._retire_completed(done, inflight, results))
+
+        assert self.retirer.held == 0, "completions left unretired"
+        assert not inflight, "futures left in flight"
+        self.stats["ctx_reuses"] = self.ctx_pool.reuses
+        return [results[i] for i in sorted(results)]
+
+    def step(self) -> RequestResult:
+        (result,) = self.run(max_requests=1)
+        return result
+
+    def shutdown(self) -> None:
+        self.pool.shutdown()

@@ -24,7 +24,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Optional, Sequence, Union
+from typing import Optional, Sequence
 
 import jax
 import numpy as np
@@ -32,10 +32,10 @@ import numpy as np
 from repro.core import features as feat_lib
 from repro.core.autotuner import TuneResult, TuningCache
 from repro.core.features import RAW_FEATURE_NAMES
-from repro.core.search import search_best
+from repro.core.search import search_best, search_best_batch
 from repro.core.stream_config import SINGLE_STREAM, StreamConfig, \
     default_space
-from repro.core.streams import StreamedRunner
+from repro.core.streams import StreamedRunner, readback_outputs
 from repro.core.workloads import get_workload
 from repro.serving.queue import RequestQueue, WorkloadRequest
 from repro.serving.refinement import DriftDetector, Refiner
@@ -55,6 +55,11 @@ class OverlapHeuristicModel:
     overlapped phase plus a per-dispatch overhead that grows with
     partitions × tasks.  Deterministic given the extracted features, so
     the serving smoke paths (CLI, CI trace) need no training set.
+
+    Fully vectorized: the candidate grid is scored as numpy arrays (the
+    ``(partitions, tasks)`` columns are memoized per grid), and a
+    ``(B, F)`` feature matrix scores ``B`` programs in one call — the
+    same batched contract as :meth:`PerformanceModel.predict_configs`.
     """
 
     def __init__(self, overhead_s: float = 30e-6):
@@ -62,16 +67,16 @@ class OverlapHeuristicModel:
 
     def predict_configs(self, prog_feats: np.ndarray,
                         configs) -> np.ndarray:
-        t_comp = float(prog_feats[_I_T_COMP]) * 1e-6
-        t_xfer = float(prog_feats[_I_T_XFER]) * 1e-6
-        base = max(t_comp + t_xfer, 1e-9)
-        preds = []
-        for c in configs:
-            makespan = (max(t_comp, t_xfer)
-                        + min(t_comp, t_xfer) / c.tasks
-                        + self.overhead_s * c.partitions * c.tasks)
-            preds.append(base / makespan)
-        return np.asarray(preds)
+        P = np.atleast_2d(np.asarray(prog_feats, dtype=np.float64))
+        t_comp = P[:, _I_T_COMP, None] * 1e-6          # (B, 1)
+        t_xfer = P[:, _I_T_XFER, None] * 1e-6
+        base = np.maximum(t_comp + t_xfer, 1e-9)
+        parts, tasks = feat_lib.config_pt_arrays(configs)   # (C,), (C,)
+        makespan = (np.maximum(t_comp, t_xfer)
+                    + np.minimum(t_comp, t_xfer) / tasks
+                    + self.overhead_s * parts * tasks)
+        preds = base / makespan                         # (B, C)
+        return preds[0] if np.ndim(prog_feats) == 1 else preds
 
 
 @dataclasses.dataclass
@@ -84,6 +89,24 @@ class RequestResult:
     cache_hit: bool
     refined: bool
     sample: TelemetrySample
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    """One request mid-flight through the decide → dispatch → retire
+    pipeline.  The serial scheduler runs all three stages back to back;
+    the concurrent engine (:mod:`repro.serving.engine`) holds many of
+    these in its in-flight window at once."""
+
+    req: WorkloadRequest
+    runner: StreamedRunner
+    key: str
+    n_rows: int
+    entry: Optional[TuneResult] = None
+    cache_hit: bool = False
+    needs_anchor: bool = False     # warm persisted hit, anchor unprofiled
+    order: int = -1                # global decision order
+    bucket_idx: int = -1           # per-bucket dispatch index
 
 
 class AdaptiveScheduler:
@@ -121,6 +144,12 @@ class AdaptiveScheduler:
         self._t_single: dict[str, float] = {}
         self._warmed: set = set()
         self._seq = 0
+        self._order = 0
+        # candidate (partitions, tasks) columns, computed once: feasibility
+        # filtering and the vectorized heuristic never loop over configs
+        self._cand_parts, self._cand_tasks = feat_lib.config_pt_arrays(
+            self.candidates)
+        self._cand_cost = self._cand_parts * self._cand_tasks
 
     # -- request intake -------------------------------------------------------
 
@@ -147,56 +176,188 @@ class AdaptiveScheduler:
         return self._process(self.queue.pop())
 
     def _process(self, req: WorkloadRequest) -> RequestResult:
-        wl = get_workload(req.workload)
-        # one runner per request: each request carries its OWN shared
-        # buffers, so a cached ExecutionContext would serve stale
-        # shared_dev data.  The expensive part — kernel compilation — is
-        # already shared across contexts by backends.base.memoized_jit;
-        # what remains per request is the shared-buffer H2D transfer,
-        # which is semantically required.
-        runner = StreamedRunner(wl, req.chunked, req.shared,
-                                backend=self.backend_name)
-        n_rows = next(iter(req.chunked.values())).shape[0]
-        key = self.cache.key(wl.name, req.chunked, req.shared,
-                             self.backend_name, self.model_tag)
+        """Serial pipeline: decide → (cold tune) → execute → retire, all
+        on the calling thread.  The concurrent engine reuses exactly
+        these stages, overlapped."""
+        pending = self._decide(req)
+        if pending.needs_anchor:
+            self._measure_anchor(pending)
+        if pending.entry is None:
+            self._tune_cold(pending)
+        outs, measured_s = self._execute(pending)
+        result = self._retire(pending, outs, measured_s)
+        self._release_runner(pending.runner)
+        return result
 
+    # -- stage 1: decide ------------------------------------------------------
+
+    def _make_runner(self, req: WorkloadRequest) -> StreamedRunner:
+        """One runner per request: each request carries its OWN shared
+        buffers, so a cached ExecutionContext would serve stale
+        shared_dev data.  The expensive part — kernel compilation — is
+        already shared across contexts by backends.base.memoized_jit.
+        The concurrent engine overrides this with a context pool that
+        swaps the per-request buffers instead of rebuilding."""
+        return StreamedRunner(get_workload(req.workload), req.chunked,
+                              req.shared, backend=self.backend_name)
+
+    def _release_runner(self, runner: StreamedRunner) -> None:
+        """Hook for the engine's context pool; serial runners are
+        garbage."""
+
+    def _decide(self, req: WorkloadRequest) -> PendingRequest:
+        """Cache lookup + anchor bookkeeping.  A returned ``entry=None``
+        means the request is cold and needs a tune before dispatch."""
+        runner = self._make_runner(req)
+        n_rows = next(iter(req.chunked.values())).shape[0]
+        key = self.cache.key(runner.wl.name, req.chunked, req.shared,
+                             self.backend_name, self.model_tag)
+        pending = PendingRequest(req=req, runner=runner, key=key,
+                                 n_rows=n_rows, order=self._order)
+        self._order += 1
         hit = self.cache.get(key, valid=lambda r: (
             r.config.partitions * r.config.tasks <= n_rows))
         if hit is not None:
-            entry, cache_hit = hit, True
-            if key not in self._t_single:
-                # warm hit from a cache persisted by a previous process:
-                # the single-stream anchor was never profiled here, and
-                # without it predicted runtime — and therefore drift
-                # detection — would stay disabled for this bucket.  One
-                # measured single-stream run restores both.
-                self._t_single[key] = runner.run(SINGLE_STREAM, reps=1)
-        else:
-            entry, cache_hit = self._cold_tune(runner, key, n_rows), False
-        config = entry.config
+            pending.entry, pending.cache_hit = hit, True
+            # warm hit from a cache persisted by a previous process: the
+            # single-stream anchor was never profiled here, and without
+            # it predicted runtime — and therefore drift detection —
+            # would stay disabled for this bucket.  Deferred to
+            # _measure_anchor so the engine can quiesce its pool first
+            # (an anchor measured under contention would bias rel_error
+            # for the bucket's lifetime).
+            pending.needs_anchor = key not in self._t_single
+        return pending
 
-        # dispatch + measure (first occurrence of a (bucket, config) pair
-        # warms up so measured runtime is execution, not compilation)
+    def _measure_anchor(self, pending: PendingRequest) -> None:
+        """One measured single-stream run restores the runtime anchor
+        (and with it drift detection) for a persisted warm hit."""
+        if pending.key not in self._t_single:
+            self._t_single[pending.key] = pending.runner.run(
+                SINGLE_STREAM, reps=1)
+        pending.needs_anchor = False
+
+    # -- stage 1b: cold tune --------------------------------------------------
+
+    def _feasible_configs(self, n_rows: int) -> list[StreamConfig]:
+        # guard: an empty filtered list would make search_best fall back
+        # to the FULL default grid, returning an unsplittable config
+        mask = self._cand_cost <= n_rows
+        return [c for c, ok in zip(self.candidates, mask)
+                if ok] or [SINGLE_STREAM]
+
+    def _extract(self, pending: PendingRequest) -> np.ndarray:
+        feats = feat_lib.extract_features(pending.runner, profile_reps=1)
+        self._feats[pending.key] = feats.values
+        self._t_single[pending.key] = \
+            float(feats.values[_I_T_SINGLE]) * 1e-6
+        return feats.values
+
+    def _tune_cold(self, pending: PendingRequest) -> TuneResult:
+        t0 = time.perf_counter()
+        feats = self._extract(pending)
+        t_feat = time.perf_counter() - t0
+        cands = self._feasible_configs(pending.n_rows)
+        best, preds, t_search = search_best(self.model, feats, cands)
+        self.stats["model_searches"] += 1
+        result = TuneResult(best, float(np.max(preds)), t_feat, t_search,
+                            backend=self.backend_name, source="model")
+        self.cache.put(pending.key, result)
+        pending.entry = result
+        return result
+
+    def _tune_cold_batch(self, pendings: Sequence[PendingRequest]) -> None:
+        """The batched cold path: extract features once per unique
+        bucket (profiling is measurement — it stays serial), then rank
+        the config space for ALL cold buckets with ONE batched
+        ``predict_configs`` call over the ``(B, F)`` feature matrix.
+
+        Per-request feasibility (row counts differ across buckets) is a
+        ``-inf`` mask into the shared prediction matrix, which keeps each
+        pick identical to what a serial ``search_best`` over that
+        request's filtered candidates would have returned."""
+        # one representative pending per unique bucket, first-seen order
+        by_key: dict[str, PendingRequest] = {}
+        for p in pendings:
+            by_key.setdefault(p.key, p)
+        uniques = list(by_key.values())
+
+        t0 = time.perf_counter()
+        F = np.stack([self._extract(p) for p in uniques])
+        t_feat = time.perf_counter() - t0
+        feasible = np.stack([self._cand_cost <= p.n_rows for p in uniques])
+
+        picks, best_preds, _, t_search = search_best_batch(
+            self.model, F, self.candidates, feasible=feasible)
+        self.stats["model_searches"] += 1
+        self.stats["batched_searches"] += 1
+        self.stats["batched_search_programs"] += len(uniques)
+
+        per_b = 1.0 / len(uniques)
+        for p, pick, pred in zip(uniques, picks, best_preds):
+            if not np.isfinite(pred):          # every candidate infeasible
+                pick, pred = SINGLE_STREAM, float(
+                    self.model.predict_configs(self._feats[p.key],
+                                               [SINGLE_STREAM])[0])
+            result = TuneResult(pick, float(pred), t_feat * per_b,
+                                t_search * per_b,
+                                backend=self.backend_name, source="model")
+            self.cache.put(p.key, result)
+            p.entry = result
+        # same-bucket duplicates inside one batch are warm hits on the
+        # representative's fresh entry — unless their own row count makes
+        # that config unsplittable (possible within one shape-bucket
+        # octave), in which case they re-tune individually, exactly as a
+        # serial pass would have
+        for p in pendings:
+            if p.entry is not None:
+                continue
+            hit = self.cache.get(p.key, valid=lambda r: (
+                r.config.partitions * r.config.tasks <= p.n_rows))
+            if hit is not None:
+                p.entry, p.cache_hit = hit, True
+            else:
+                self._tune_cold(p)
+
+    # -- stage 2: execute -----------------------------------------------------
+
+    def _execute(self, pending: PendingRequest) -> tuple[list, float]:
+        """Dispatch + measure.  Thread-safe given distinct runners: the
+        only shared state is the ``_warmed`` set (GIL-atomic adds; a rare
+        duplicate warmup is harmless).  First occurrence of a
+        (bucket, config) pair warms up so measured runtime is execution,
+        not compilation."""
+        runner, key = pending.runner, pending.key
+        config = pending.entry.config
         if self.warm_before_measure and (key, config) not in self._warmed:
             runner.warmup(config)
             self._warmed.add((key, config))
         t0 = time.perf_counter()
         outs = runner.dispatch(config)
         jax.block_until_ready(outs)
-        # read back like StreamedRunner.run does, so measured_s and the
-        # single-stream prediction anchor are timed on the same basis
-        # (dispatch + compute + D2H); otherwise rel_error carries a
-        # constant bias on transfer-heavy workloads
-        for o in outs:
-            np.asarray(jax.tree.leaves(o)[0], copy=False)
-        measured_s = time.perf_counter() - t0
+        # read back like StreamedRunner.run does — every output leaf —
+        # so measured_s and the single-stream prediction anchor are timed
+        # on the same basis (dispatch + compute + D2H); otherwise
+        # rel_error carries a constant bias on transfer-heavy workloads
+        readback_outputs(outs)
+        return outs, time.perf_counter() - t0
 
+    # -- stage 3: retire ------------------------------------------------------
+
+    def _retire(self, pending: PendingRequest, outs: list,
+                measured_s: float) -> RequestResult:
+        """Telemetry + drift + refinement.  Runs on the coordinating
+        thread only — per-bucket ordering of drift observations is the
+        engine's contract, and the refiner re-profiles on the pending
+        request's own runner."""
+        req, key, entry = pending.req, pending.key, pending.entry
+        config = entry.config
         predicted_s = self._predicted_runtime(key, entry)
         rel = relative_error(measured_s, predicted_s)
 
         refined = False
         if self.drift.observe(key, rel):
-            refinement = self.refiner.refine(runner, key,
+            refinement = self.refiner.refine(pending.runner, key,
                                              self._feats.get(key), entry)
             # recalibrate the runtime anchor from the refinement's own
             # measured single-stream run
@@ -207,42 +368,22 @@ class AdaptiveScheduler:
 
         self._seq += 1
         sample = TelemetrySample(
-            seq=self._seq, tenant=req.tenant, workload=wl.name, key=key,
-            backend=self.backend_name, partitions=config.partitions,
-            tasks=config.tasks, cache_hit=cache_hit,
+            seq=self._seq, tenant=req.tenant, workload=pending.runner.wl.name,
+            key=key, backend=self.backend_name, partitions=config.partitions,
+            tasks=config.tasks, cache_hit=pending.cache_hit,
             predicted_s=predicted_s, measured_s=measured_s, rel_error=rel,
             refined=refined, source=entry.source)
         self.telemetry.append(sample)
 
         self.stats["requests"] += 1
-        self.stats["cache_hits" if cache_hit else "cold_misses"] += 1
+        self.stats["cache_hits" if pending.cache_hit else "cold_misses"] += 1
         self.stats[f"tenant.{req.tenant}.served"] += 1
 
         return RequestResult(
             request=req, config=config,
             outputs=outs if self.keep_outputs else [],
             measured_s=measured_s, predicted_s=predicted_s,
-            cache_hit=cache_hit, refined=refined, sample=sample)
-
-    # -- cold path ------------------------------------------------------------
-
-    def _cold_tune(self, runner: StreamedRunner, key: str,
-                   n_rows: int) -> TuneResult:
-        t0 = time.perf_counter()
-        feats = feat_lib.extract_features(runner, profile_reps=1)
-        t_feat = time.perf_counter() - t0
-        self._feats[key] = feats.values
-        self._t_single[key] = float(feats.values[_I_T_SINGLE]) * 1e-6
-        # guard: an empty filtered list would make search_best fall back
-        # to the FULL default grid, returning an unsplittable config
-        cands = [c for c in self.candidates
-                 if c.partitions * c.tasks <= n_rows] or [SINGLE_STREAM]
-        best, preds, t_search = search_best(self.model, feats.values, cands)
-        self.stats["model_searches"] += 1
-        result = TuneResult(best, float(np.max(preds)), t_feat, t_search,
-                            backend=self.backend_name, source="model")
-        self.cache.put(key, result)
-        return result
+            cache_hit=pending.cache_hit, refined=refined, sample=sample)
 
     def _predicted_runtime(self, key: str,
                            entry: TuneResult) -> Optional[float]:

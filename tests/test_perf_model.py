@@ -94,3 +94,22 @@ def test_config_features_monotone():
     b = config_features(4, 16)
     assert a.shape == (N_CONFIG_FEATURES,)
     assert b[0] > a[0] and b[1] > a[1]
+
+
+def test_predict_configs_batched_matches_per_program():
+    """A (B, F) feature matrix ranks B programs in one forward pass with
+    exactly the per-program predictions (the serving engine's batched
+    cold path)."""
+    X, y = _synthetic()
+    m = PerformanceModel.train(X, y, epochs=200)
+    rng = np.random.default_rng(1)
+    progs = rng.normal(size=(3, N_SYN_FEATURES))
+    cands = [StreamConfig(1, 1), StreamConfig(1, 8), StreamConfig(2, 4),
+             StreamConfig(4, 16)]
+    batched = m.predict_configs(progs, cands)
+    assert batched.shape == (3, len(cands))
+    for b in range(3):
+        single = m.predict_configs(progs[b], cands)
+        assert single.shape == (len(cands),)
+        np.testing.assert_allclose(batched[b], single, rtol=1e-5,
+                                   atol=1e-6)

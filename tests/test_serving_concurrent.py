@@ -1,0 +1,346 @@
+"""Concurrent serving engine: serial-vs-concurrent equivalence (same
+trace → same configs, allclose outputs, identical telemetry count),
+deterministic per-bucket retirement under ANY completion order, the
+batched cold-path model search, pooled ExecutionContexts, and the
+memoized dispatch-plan cache."""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.backends import (ExecutionContext, dispatch_plan,
+                                 get_backend, split_arrays)
+from repro.core.stream_config import SINGLE_STREAM, StreamConfig
+from repro.core.streams import StreamedRunner
+from repro.core.workloads import Workload, get_workload
+from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
+                           ContextPool, DriftDetector,
+                           OverlapHeuristicModel, OrderedRetirer,
+                           WorkloadRequest, make_trace)
+
+WORKLOADS = ["vecadd", "dotprod", "mvmult"]
+
+
+class _BatchedStub:
+    """Deterministic constant predictor that records every call's feature
+    batch size; works for (F,) and (B, F) inputs like the real models."""
+
+    def __init__(self):
+        self.calls = []
+
+    def predict_configs(self, feats, candidates):
+        F = np.atleast_2d(np.asarray(feats))
+        self.calls.append(F.shape[0])
+        preds = np.ones((F.shape[0], len(candidates)))
+        return preds[0] if np.ndim(feats) == 1 else preds
+
+
+def _req(workload="vecadd", rows=256, seed=0, **kw):
+    wl = get_workload(workload)
+    chunked, shared = wl.make_data(rows, np.random.default_rng(seed))
+    return WorkloadRequest(workload=workload, chunked=chunked,
+                          shared=shared, **kw)
+
+
+def _lenient_drift():
+    return DriftDetector(threshold=1e9)
+
+
+def _concat(outputs):
+    return np.concatenate([np.asarray(o) for o in outputs], axis=0)
+
+
+# -- serial vs concurrent equivalence ----------------------------------------
+
+
+def test_concurrent_matches_serial_end_to_end():
+    """Same trace through both engines: identical per-request configs and
+    cache-hit pattern, allclose outputs, identical telemetry count, and
+    results returned in decision order."""
+    serial = AdaptiveScheduler(_BatchedStub(), drift=_lenient_drift())
+    conc = ConcurrentScheduler(_BatchedStub(), window=4,
+                               drift=_lenient_drift())
+    serial.submit_all(make_trace(WORKLOADS, occurrences=3, seed=0))
+    conc.submit_all(make_trace(WORKLOADS, occurrences=3, seed=0))
+    rs, rc = serial.run(), conc.run()
+
+    assert len(rs) == len(rc) == 9
+    assert [r.config for r in rc] == [r.config for r in rs]
+    assert [r.cache_hit for r in rc] == [r.cache_hit for r in rs]
+    assert len(conc.telemetry) == len(serial.telemetry) == 9
+    # decision order: results line up with the trace's arrival sequence
+    assert [r.request.seq for r in rc] == [r.request.seq for r in rs]
+    for a, b in zip(rs, rc):
+        np.testing.assert_allclose(
+            _concat(b.outputs), _concat(a.outputs), rtol=2e-4, atol=1e-3,
+            err_msg=a.request.workload)
+    assert conc.stats["requests"] == 9
+    assert conc.stats["batched_searches"] >= 1
+
+
+def test_window_one_degenerates_to_serial():
+    serial = AdaptiveScheduler(_BatchedStub(), drift=_lenient_drift())
+    conc = ConcurrentScheduler(_BatchedStub(), window=1,
+                               drift=_lenient_drift())
+    serial.submit_all([_req(seed=s) for s in range(3)])
+    conc.submit_all([_req(seed=s) for s in range(3)])
+    rs, rc = serial.run(), conc.run()
+    assert [r.config for r in rc] == [r.config for r in rs]
+    assert [r.cache_hit for r in rc] == [r.cache_hit for r in rs]
+    for a, b in zip(rs, rc):
+        np.testing.assert_allclose(_concat(b.outputs), _concat(a.outputs),
+                                   rtol=2e-4, atol=1e-3)
+
+
+def test_concurrent_respects_queue_policy_order():
+    conc = ConcurrentScheduler(_BatchedStub(), window=2, policy="priority",
+                               drift=_lenient_drift())
+    conc.submit(_req(tenant="background", priority=0, seed=0))
+    conc.submit(_req(tenant="interactive", priority=9, seed=1))
+    results = conc.run()
+    assert [r.request.tenant for r in results] == ["interactive",
+                                                   "background"]
+
+
+def test_concurrent_max_requests_budget():
+    conc = ConcurrentScheduler(_BatchedStub(), window=4,
+                               drift=_lenient_drift())
+    conc.submit_all([_req(seed=s) for s in range(5)])
+    first = conc.run(max_requests=2)
+    assert len(first) == 2 and len(conc.queue) == 3
+    rest = conc.run()
+    assert len(rest) == 3 and not conc.queue
+
+
+# -- out-of-order retirement determinism -------------------------------------
+
+
+def test_ordered_retirer_deterministic_under_any_completion_order():
+    """For a fixed dispatch sequence, EVERY completion permutation flushes
+    each bucket's payloads in that bucket's dispatch order."""
+    dispatch = ["a", "a", "b", "a", "b"]
+    for perm in itertools.permutations(range(len(dispatch))):
+        retirer = OrderedRetirer()
+        issued = [(key, retirer.issue(key)) for key in dispatch]
+        flushed: dict[str, list] = {"a": [], "b": []}
+        for i in perm:
+            key, idx = issued[i]
+            flushed[key].extend(retirer.complete(key, idx, (key, idx)))
+        assert retirer.held == 0
+        assert flushed["a"] == [("a", 0), ("a", 1), ("a", 2)]
+        assert flushed["b"] == [("b", 0), ("b", 1)]
+
+
+def test_per_bucket_telemetry_follows_dispatch_order():
+    """One bucket, tenants stamped in arrival order: even with 4 requests
+    in flight, the bucket's telemetry sequence is its dispatch order."""
+    conc = ConcurrentScheduler(_BatchedStub(), window=4,
+                               drift=_lenient_drift())
+    conc.submit_all([_req(tenant=f"t{i}", seed=i) for i in range(8)])
+    conc.run()
+    assert [s.tenant for s in conc.telemetry] == [f"t{i}" for i in range(8)]
+    # telemetry seq is retirement order: strictly increasing, no gaps
+    assert [s.seq for s in conc.telemetry] == list(range(1, 9))
+
+
+def test_failed_execution_releases_resources_and_bucket():
+    """A raised execute must not poison its bucket or leak contexts:
+    survivors retire, the error propagates, and the engine stays
+    serviceable for the next run."""
+    class Flaky(ConcurrentScheduler):
+        def _execute(self, pending):
+            if pending.req.tenant == "boom":
+                raise RuntimeError("injected")
+            return super()._execute(pending)
+
+    eng = Flaky(_BatchedStub(), window=4, drift=_lenient_drift())
+    eng.submit_all([_req(tenant="ok0", seed=0), _req(tenant="boom", seed=1),
+                    _req(tenant="ok1", seed=2), _req(tenant="ok2", seed=3)])
+    with pytest.raises(RuntimeError, match="injected"):
+        eng.run()
+    assert eng.retirer.held == 0
+    served = {s.tenant for s in eng.telemetry}
+    assert "boom" not in served
+    assert {"ok0", "ok1", "ok2"} <= served       # same-bucket survivors
+    # leased contexts all came back: the pool can serve again
+    eng.submit(_req(tenant="after", seed=4))
+    (res,) = eng.run()
+    assert res.request.tenant == "after" and res.cache_hit
+
+
+# -- batched cold path --------------------------------------------------------
+
+
+def test_cold_window_uses_one_batched_search():
+    """Three cold buckets decided in one window fill → exactly ONE
+    predict_configs call carrying a (3, F) feature matrix."""
+    model = _BatchedStub()
+    conc = ConcurrentScheduler(model, window=4, drift=_lenient_drift())
+    conc.submit_all(make_trace(WORKLOADS, occurrences=1, seed=0))
+    results = conc.run()
+    assert len(results) == 3
+    assert model.calls == [3]
+    assert conc.stats["batched_searches"] == 1
+    assert conc.stats["batched_search_programs"] == 3
+    assert conc.stats["model_searches"] == 1
+
+
+def test_batched_cold_duplicates_share_the_entry():
+    """Two same-bucket requests in one cold window: one feature
+    extraction, the duplicate becomes a warm hit on the fresh entry."""
+    model = _BatchedStub()
+    conc = ConcurrentScheduler(model, window=4, drift=_lenient_drift())
+    conc.submit_all([_req(seed=0), _req(seed=1), _req("dotprod", seed=2)])
+    results = conc.run()
+    assert model.calls == [2]          # vecadd + dotprod buckets only
+    assert [r.cache_hit for r in results] == [False, True, False]
+    assert results[1].config == results[0].config
+
+
+def test_batched_infeasible_candidates_fall_back_to_single_stream():
+    conc = ConcurrentScheduler(_BatchedStub(), window=4,
+                               candidates=[StreamConfig(32, 64)],
+                               drift=_lenient_drift())
+    conc.submit_all([_req(rows=16, seed=0), _req("dotprod", rows=16,
+                                                 seed=1)])
+    results = conc.run()
+    assert all(r.config == SINGLE_STREAM for r in results)
+    assert _concat(results[0].outputs).shape[0] == 16
+
+
+def test_heuristic_model_batched_matches_per_row():
+    rng = np.random.default_rng(0)
+    feats = rng.uniform(1.0, 1000.0, size=(4, 22))
+    cands = [StreamConfig(1, 1), StreamConfig(1, 4), StreamConfig(2, 8),
+             StreamConfig(8, 64)]
+    m = OverlapHeuristicModel()
+    batched = m.predict_configs(feats, cands)
+    assert batched.shape == (4, len(cands))
+    for b in range(4):
+        np.testing.assert_allclose(batched[b],
+                                   m.predict_configs(feats[b], cands))
+
+
+# -- pooled execution contexts ------------------------------------------------
+
+
+def test_context_pool_reuses_and_swaps_shared_buffers():
+    pool = ContextPool()
+    wl = get_workload("mvmult")
+    backend = get_backend("host-sync")
+    rng = np.random.default_rng(0)
+
+    c1, s1 = wl.make_data(128, rng)
+    ctx1 = pool.lease(wl, c1, s1)
+    out1 = _concat(backend.dispatch(ctx1, StreamConfig(1, 2)))
+    np.testing.assert_allclose(out1, c1["A"] @ s1["v"], rtol=2e-4,
+                               atol=1e-3)
+    pool.release(wl.name, ctx1)
+
+    c2, s2 = wl.make_data(128, rng)
+    ctx2 = pool.lease(wl, c2, s2)
+    assert ctx2 is ctx1 and pool.reuses == 1       # recycled, not rebuilt
+    out2 = _concat(backend.dispatch(ctx2, StreamConfig(1, 2)))
+    # the swapped-in shared buffer serves the NEW request's v, not stale
+    np.testing.assert_allclose(out2, c2["A"] @ s2["v"], rtol=2e-4,
+                               atol=1e-3)
+
+
+def test_context_pool_empty_shared_swap_skips_upload():
+    pool = ContextPool()
+    wl = get_workload("vecadd")
+    c1, s1 = wl.make_data(64, np.random.default_rng(0))
+    ctx = pool.lease(wl, c1, s1)
+    pool.release(wl.name, ctx)
+    c2, s2 = wl.make_data(64, np.random.default_rng(1))
+    ctx2 = pool.lease(wl, c2, s2)
+    assert ctx2 is ctx and ctx2.shared_dev == {}
+    out = _concat(get_backend("host-sync").dispatch(ctx2, SINGLE_STREAM))
+    np.testing.assert_allclose(out, c2["a"] + c2["b"], rtol=2e-4,
+                               atol=1e-3)
+
+
+def test_concurrent_leases_are_distinct_contexts():
+    pool = ContextPool()
+    wl = get_workload("vecadd")
+    c1, s1 = wl.make_data(64, np.random.default_rng(0))
+    c2, s2 = wl.make_data(64, np.random.default_rng(1))
+    ctx1 = pool.lease(wl, c1, s1)
+    ctx2 = pool.lease(wl, c2, s2)        # ctx1 not released: new context
+    assert ctx1 is not ctx2
+    assert pool.leases == 2 and pool.reuses == 0
+
+
+# -- dispatch-plan cache ------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_rows,config", [
+    (13, StreamConfig(3, 2)),
+    (100, StreamConfig(2, 3)),
+    (7, StreamConfig(1, 7)),
+    (64, StreamConfig(4, 8)),
+])
+def test_dispatch_plan_matches_nested_array_split(n_rows, config):
+    x = np.arange(n_rows)
+    expect = []
+    for task in np.array_split(x, config.tasks):
+        expect.extend(np.array_split(task, config.partitions))
+    plan = dispatch_plan(n_rows, config)
+    got = [x[lo:hi] for parts in plan for lo, hi in parts]
+    assert len(got) == len(expect)
+    for g, e in zip(got, expect):
+        np.testing.assert_array_equal(g, e)
+    assert dispatch_plan(n_rows, config) is plan      # memoized
+
+
+def test_backends_equivalent_on_non_divisible_rows():
+    wl = get_workload("vecadd")
+    chunked, shared = wl.make_data(100, np.random.default_rng(0))
+    ref = None
+    for name in ("host-sync", "host-pipelined", "host-threads"):
+        runner = StreamedRunner(wl, chunked, shared, backend=name)
+        got = _concat(runner.dispatch(StreamConfig(2, 3)))
+        if ref is None:
+            ref = _concat(runner.dispatch(SINGLE_STREAM))
+        np.testing.assert_allclose(got, ref, rtol=2e-4, atol=1e-3,
+                                   err_msg=name)
+
+
+# -- full-leaf D2H read-back --------------------------------------------------
+
+
+def test_run_materializes_all_output_leaves():
+    """A multi-output kernel must round-trip every leaf through the host
+    during a timed run (the old read-back touched only the first)."""
+    import jax.numpy as jnp
+
+    wl = Workload(
+        "multi-out-local", "test",
+        kernel=lambda c, s: {"doubled": c["x"] * 2.0,
+                             "summed": jnp.sum(c["x"], axis=1)},
+        make_data=lambda n, rng: (
+            {"x": rng.standard_normal((n, 8)).astype(np.float32)}, {}),
+        datasets=(32,))
+    chunked, shared = wl.make_data(32, np.random.default_rng(0))
+    runner = StreamedRunner(wl, chunked, shared)
+    t = runner.run(StreamConfig(1, 2), reps=1)
+    assert np.isfinite(t) and t > 0
+    outs = runner.dispatch(StreamConfig(1, 2))
+    got = np.concatenate([np.asarray(o["doubled"]) for o in outs], axis=0)
+    np.testing.assert_allclose(got, chunked["x"] * 2.0, rtol=1e-6,
+                               atol=1e-6)
+
+
+def test_split_arrays_still_exported():
+    # back-compat: older callers split dicts directly
+    parts = split_arrays({"x": np.arange(10)}, 3)
+    assert [len(p["x"]) for p in parts] == [4, 3, 3]
+
+
+def test_execution_context_swap_rebinds_chunked():
+    wl = get_workload("vecadd")
+    c1, s1 = wl.make_data(32, np.random.default_rng(0))
+    ctx = ExecutionContext.create(wl.kernel, c1, s1, None)
+    c2, s2 = wl.make_data(32, np.random.default_rng(1))
+    ctx.swap_buffers(c2, s2)
+    assert ctx.chunked is c2 and ctx.shared is s2
