@@ -8,6 +8,9 @@ run also profiles the 39-program suite).
     PYTHONPATH=src python -m benchmarks.run --quick    # tiny subset
     PYTHONPATH=src python -m benchmarks.run --compare-backends  # executor A/B
     PYTHONPATH=src python -m benchmarks.run --serve-concurrent  # engine A/B
+    PYTHONPATH=src python -m benchmarks.run --serve-oracle --tenants 3
+                                # steady-state regret vs the per-workload
+                                # oracle -> BENCH_oracle.json
 
 A dry-run roofline summary (from benchmarks/data/dryrun/*.json, produced
 by benchmarks/dryrun_sweep.py) is appended when available.
@@ -29,7 +32,7 @@ sys.path.insert(0, os.path.join(ROOT, "src"))
 # CPU-inference configuration).  Must be set before jaxlib creates its
 # client, hence before the imports below; applies to BOTH engines, so it
 # is a deployment mode, not a thumb on the scale.
-if "--serve-concurrent" in sys.argv:
+if "--serve-concurrent" in sys.argv or "--serve-oracle" in sys.argv:
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_cpu_multi_thread_eigen=false"
                                  " intra_op_parallelism_threads=1")
@@ -39,7 +42,8 @@ import numpy as np  # noqa: E402
 from repro.core import dataset as ds  # noqa: E402
 from repro.core.backends import list_backends  # noqa: E402
 from repro.core.stream_config import StreamConfig  # noqa: E402
-from repro.core.streams import StreamedRunner  # noqa: E402
+from repro.core.streams import (StreamedRunner,  # noqa: E402
+                                profile_grid_interleaved)
 from repro.core.workloads import get_workload  # noqa: E402
 
 from benchmarks import paper_figures as pf  # noqa: E402
@@ -180,14 +184,15 @@ def _parallel_capacity(programs, scale_index, workers, *,
                        reps: int = 8) -> float:
     """Calibrate the box: how much does raw kernel execution speed up
     when issued from ``workers`` threads instead of one?  Uses the
-    trace's own kernels (compiled + device-resident, min-of-2 trials),
-    so the number is the hardware ceiling the engine is chasing — on a
+    trace's own kernels (compiled + device-resident, max-of-2 trials;
+    the timing core is :func:`repro.core.streams.parallel_capacity`,
+    shared with the engine's load-aware drift calibration), so the
+    number is the hardware ceiling the engine is chasing — on a
     steal-heavy 2-vCPU container this can be well under the thread
     count, and the engine can't beat physics."""
-    import concurrent.futures
-
     import jax
 
+    from repro.core.streams import parallel_capacity
     from repro.core.workloads import get_workload
 
     calls = []
@@ -199,27 +204,12 @@ def _parallel_capacity(programs, scale_index, workers, *,
         dev = jax.device_put(chunked)
         sh = jax.device_put(shared)
         jax.block_until_ready(jitk(dev, sh))        # compile, untimed
-        calls.append((jitk, dev, sh))
 
-    def one(i):
-        jitk, dev, sh = calls[i % len(calls)]
-        jax.block_until_ready(jitk(dev, sh))
+        def call(jitk=jitk, dev=dev, sh=sh):
+            jax.block_until_ready(jitk(dev, sh))
+        calls.append(call)
 
-    pool = concurrent.futures.ThreadPoolExecutor(workers)
-    best = 0.0
-    for _ in range(2):
-        t0 = time.perf_counter()
-        for i in range(reps * len(calls)):
-            one(i)
-        t_serial = time.perf_counter() - t0
-        t0 = time.perf_counter()
-        futs = [pool.submit(one, i) for i in range(reps * len(calls))]
-        for f in futs:
-            f.result()
-        t_threaded = time.perf_counter() - t0
-        best = max(best, t_serial / max(t_threaded, 1e-12))
-    pool.shutdown()
-    return best
+    return parallel_capacity(calls, workers, reps=reps)
 
 
 def serve_concurrent_trace(programs=None, *, n_requests: int = 18,
@@ -350,6 +340,182 @@ def serve_concurrent_trace(programs=None, *, n_requests: int = 18,
     return rows
 
 
+SERVE_ORACLE_PROGRAMS = ["vecadd", "dotprod", "mvmult", "binomial"]
+# the regret protocol's shared candidate space: small enough to profile
+# exhaustively (the oracle side), identical for the adaptive scheduler
+# (the achieved side) — regret compares picks over the SAME choices
+ORACLE_GRID = [StreamConfig(p, t) for p in (1, 2, 4)
+               for t in (1, 2, 4, 8, 16) if t >= p]
+
+
+def serve_oracle_trace(programs=None, *, tenants: int = 3, rounds: int = 12,
+                       backend: str = "host-sync", window: int = 4,
+                       workers: int | None = None, scale_index: int = 8,
+                       oracle_reps: int = 3,
+                       json_path: str = "BENCH_oracle.json") -> list[str]:
+    """Long-trace oracle-regret benchmark: the adaptive engine's
+    steady state vs a theoretically perfect predictor, per tenant.
+
+    The paper's headline claim is that the learnt predictor delivers
+    over 93% of the oracle's performance.  This measures our *serving
+    loop* against the same bar:
+
+      oracle    exhaustively profile ``ORACLE_GRID`` per workload
+                bucket — the perfect predictor's pick and its runtime.
+                The grid is profiled TWICE, before and after serving,
+                and merged min-per-config: a neighbor-load spike during
+                either pass then cannot masquerade as (or hide) regret
+                on this shared-vCPU class of CI box;
+      achieved  serve a ``rounds``-round multi-tenant trace through the
+                concurrent engine with tenant isolation and load-aware
+                drift, then read each tenant's steady-state cache entry
+                (the config its NEXT request would use) and look its
+                idle runtime up in the same profiled grid;
+      regret    oracle_runtime / achieved_runtime per (tenant,
+                workload), in (0, 1]; reported per tenant and overall.
+
+    Reading achieved runtimes from the same idle-profiled grid keeps
+    contention out of the *metric* (the engine still serves under
+    contention — that is what the load-aware drift signal is being
+    scored on: spurious refinements are also reported).
+    """
+    from repro.core.autotuner import TuningCache
+    from repro.serving import (ConcurrentScheduler, DriftDetector,
+                               OverlapHeuristicModel, Refiner,
+                               TelemetryLog, make_trace)
+
+    programs = programs or SERVE_ORACLE_PROGRAMS
+    workers = workers or max(2, min(window, os.cpu_count() or 2))
+    tenant_names = [f"tenant-{i}" for i in range(tenants)]
+    rows = []
+
+    # --- oracle pass A: exhaustive profiling per workload bucket ---------
+    trace = make_trace(programs, occurrences=rounds, tenants=tenant_names,
+                       scale_index=scale_index)
+    first = {}
+    for req in trace:
+        first.setdefault(req.workload, req)
+    runners = {name: StreamedRunner(get_workload(name), req.chunked,
+                                    req.shared, backend=backend)
+               for name, req in first.items()}
+    grids = {}           # workload -> {cfg: min wall over both passes}
+    for name, runner in runners.items():
+        n_rows = next(iter(runner.chunked.values())).shape[0]
+        cands = [c for c in ORACLE_GRID
+                 if c.partitions * c.tasks <= n_rows]
+        grids[name] = profile_grid_interleaved(runner, cands,
+                                                sweeps=oracle_reps)
+
+    # --- achieved: isolated multi-tenant adaptive serving ----------------
+    model = OverlapHeuristicModel()
+    cache = TuningCache()
+    sched = ConcurrentScheduler(
+        model, window=window, workers=workers,
+        backend=backend, policy="fair", cache=cache,
+        candidates=list(ORACLE_GRID), isolate_tenants=True,
+        drift=DriftDetector(window=8, threshold=0.35, min_samples=2,
+                            cooldown=2),
+        refiner=Refiner(model, cache, candidates=list(ORACLE_GRID),
+                        top_k=3, reps=3),
+        telemetry=TelemetryLog(), keep_outputs=False)
+    with sched:
+        sched.submit_all(trace)
+        t0 = time.perf_counter()
+        sched.run()
+        wall = time.perf_counter() - t0
+
+        # --- oracle pass B + min-merge ----------------------------------
+        oracle = {}      # workload -> (best cfg, t_s, merged grid)
+        for name, runner in runners.items():
+            merged = profile_grid_interleaved(
+                runner, list(grids[name]), sweeps=oracle_reps,
+                prior=grids[name])
+            best = min(merged, key=merged.get)
+            oracle[name] = (best, merged[best], merged)
+            rows.append(f"serve_oracle.oracle.{name},"
+                        f"{merged[best]*1e6:.0f},"
+                        f"config={best.partitions}x{best.tasks}")
+
+        # steady state: the cache entry each (tenant, workload) would
+        # serve its NEXT request from, scored on the idle-profiled grid
+        per_tenant = {}
+        for tenant in tenant_names:
+            ctx = sched.tenancy.get(tenant)
+            per_workload = {}
+            for name, req in first.items():
+                key = sched.cache.key(name, req.chunked, req.shared,
+                                      backend, sched.model_tag,
+                                      namespace=ctx.namespace)
+                entry = sched.cache.get(key)
+                if entry is None:        # tenant never saw this workload
+                    continue
+                _, t_oracle, measured = oracle[name]
+                achieved = measured.get(entry.config)
+                if achieved is None:     # off-grid (cannot happen today)
+                    achieved = StreamedRunner(
+                        get_workload(name), req.chunked, req.shared,
+                        backend=backend).run(entry.config,
+                                             reps=oracle_reps)
+                per_workload[name] = {
+                    "config": entry.config.as_tuple(),
+                    "source": entry.source,
+                    "achieved_s": achieved,
+                    "oracle_s": t_oracle,
+                    "regret": t_oracle / max(achieved, 1e-12),
+                }
+            regrets = [w["regret"] for w in per_workload.values()]
+            regret = sum(regrets) / len(regrets) if regrets else None
+            per_tenant[tenant] = {
+                "regret": regret,
+                "refinements": ctx.refinements,
+                "served": ctx.served,
+                "per_workload": per_workload,
+            }
+            regret_str = f"{regret:.3f}" if regret is not None else "n/a"
+            rows.append(
+                f"serve_oracle.{tenant},0,regret={regret_str},"
+                f"refinements={ctx.refinements},served={ctx.served}")
+
+        all_regrets = [t["regret"] for t in per_tenant.values()
+                       if t["regret"] is not None]
+        # a tenant can go unserved when the trace is shorter than the
+        # tenant count (tiny smoke configs) — regret is then undefined
+        mean_regret = (sum(all_regrets) / len(all_regrets)
+                       if all_regrets else None)
+        summary = sched.telemetry.summary()
+        mean_str = (f"{mean_regret:.3f}" if mean_regret is not None
+                    else "n/a")
+        rows.append(f"serve_oracle.mean,0,regret={mean_str},"
+                    f"target=0.93,refinements={summary['refinements']},"
+                    f"requests={summary['requests']}")
+
+        payload = {
+            "programs": programs,
+            "tenants": tenant_names,
+            "rounds": rounds,
+            "n_requests": len(trace),
+            "backend": backend,
+            "window": window,
+            "workers": workers,
+            "scale_index": scale_index,
+            "oracle_reps": oracle_reps,
+            "cpu_count": os.cpu_count(),
+            "wall_s": wall,
+            "oracle": {name: {"config": cfg.as_tuple(), "t_s": t}
+                       for name, (cfg, t, _) in oracle.items()},
+            "per_tenant": per_tenant,
+            "mean_regret": mean_regret,
+            "target_regret": 0.93,
+            "parallel_capacity": sched.parallel_capacity,
+            "telemetry_summary": summary,
+        }
+    os.makedirs(os.path.dirname(os.path.abspath(json_path)), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    rows.append(f"# oracle-regret JSON written to {json_path}")
+    return rows
+
+
 def dryrun_summary() -> list[str]:
     rows = []
     for path in sorted(glob.glob(os.path.join(
@@ -397,7 +563,30 @@ def main() -> None:
     ap.add_argument("--serve-workers", type=int, default=None)
     ap.add_argument("--serve-scale", type=int, default=8,
                     help="dataset scale index for the concurrent trace")
+    ap.add_argument("--serve-oracle", action="store_true",
+                    help="long-trace oracle-regret benchmark (adaptive "
+                         "steady state vs exhaustive per-workload "
+                         "oracle); writes BENCH_oracle.json")
+    ap.add_argument("--tenants", type=int, default=3,
+                    help="isolated tenants for --serve-oracle")
+    ap.add_argument("--oracle-rounds", type=int, default=12,
+                    help="trace rounds over the program mix for "
+                         "--serve-oracle")
+    ap.add_argument("--oracle-scale", type=int, default=8,
+                    help="dataset scale index for --serve-oracle")
     args = ap.parse_args()
+
+    if args.serve_oracle:
+        print("name,us_per_call,derived")
+        for row in serve_oracle_trace(
+                args.programs.split(",") if args.programs else None,
+                tenants=args.tenants, rounds=args.oracle_rounds,
+                backend=args.serve_backend,
+                window=args.serve_window, workers=args.serve_workers,
+                scale_index=args.oracle_scale,
+                json_path=args.serve_json or "BENCH_oracle.json"):
+            print(row)
+        return
 
     if args.serve_concurrent:
         print("name,us_per_call,derived")

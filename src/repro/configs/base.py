@@ -12,7 +12,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
-import numpy as np
 
 # ---------------------------------------------------------------------------
 # Input shapes (assigned): every LM-family arch is paired with all four.

@@ -129,9 +129,19 @@ class TuningCache:
 
     @staticmethod
     def key(workload: str, chunked: dict, shared: dict, backend: str,
-            model_tag: str = "") -> str:
-        return (f"{workload}|{backend}|{model_tag}|"
+            model_tag: str = "", namespace: str = "") -> str:
+        """Cache key, optionally prefixed with a tenant ``namespace``.
+
+        An empty namespace yields the exact pre-tenancy key format, so
+        persisted caches written before isolation existed keep hitting.
+        Namespaced entries share the file but never collide across
+        tenants — the serving scheduler's per-tenant cache isolation."""
+        base = (f"{workload}|{backend}|{model_tag}|"
                 f"{data_signature(chunked, shared)}")
+        return f"tenant:{namespace}|{base}" if namespace else base
+
+    def keys(self) -> list[str]:
+        return list(self._entries)
 
     def get(self, key: str, *, valid=None) -> Optional[TuneResult]:
         """Stats-counted lookup; an entry failing the ``valid`` predicate

@@ -16,7 +16,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Optional
 
 import numpy as np
 

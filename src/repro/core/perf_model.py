@@ -178,6 +178,18 @@ class PerformanceModel:
                                             lr=lr, epochs=epochs)
         return float(loss)
 
+    def fork(self) -> "PerformanceModel":
+        """A refit-isolated copy sharing the frozen feature pipeline.
+
+        ``refit`` rebinds ``mlp_params`` to freshly built trees (adam
+        never mutates arrays in place), so copying the layer containers
+        is enough: the fork and the original diverge from the first
+        refit on either side.  This is the serving tenancy hook — every
+        tenant refits its own fork of the shared read-only base model."""
+        return PerformanceModel(self.pipeline,
+                                [dict(layer) for layer in self.mlp_params],
+                                self.hidden)
+
     def predict_configs(self, prog_feats: np.ndarray,
                         configs) -> np.ndarray:
         """Rank many configs for one or many programs (the runtime search

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterable, Sequence
 
 
 @dataclasses.dataclass(frozen=True, order=True)

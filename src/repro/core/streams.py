@@ -132,6 +132,60 @@ class StreamedRunner:
         return jax.jit(self.wl.kernel).lower(shapes, sshapes)
 
 
+def parallel_capacity(calls, workers: int, *, reps: int = 8,
+                      trials: int = 2) -> float:
+    """Calibrate the host: how much does issuing ``calls`` from
+    ``workers`` threads speed up over serial issue?
+
+    ``calls`` are zero-arg callables that block until their work is
+    done (compiled, device-resident kernels — so the ratio is the raw
+    hardware scaling ceiling, not compile or H2D noise).  Max over
+    ``trials`` serial/threaded pairs, because steal time on shared
+    boxes deflates single trials.  This one number is consumed twice:
+    the ``--serve-concurrent`` benchmark reports it as the ceiling the
+    engine chases, and the concurrent engine's load-aware drift signal
+    divides in-flight occupancy by it to normalize contention out of
+    ``measured_s`` before drift detection."""
+    import concurrent.futures
+
+    n = max(1, reps) * len(calls)
+
+    def one(i: int) -> None:
+        calls[i % len(calls)]()
+
+    pool = concurrent.futures.ThreadPoolExecutor(workers)
+    try:
+        best = 0.0
+        for _ in range(max(1, trials)):
+            t0 = time.perf_counter()
+            for i in range(n):
+                one(i)
+            t_serial = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            futs = [pool.submit(one, i) for i in range(n)]
+            for f in futs:
+                f.result()
+            t_threaded = time.perf_counter() - t0
+            best = max(best, t_serial / max(t_threaded, 1e-12))
+    finally:
+        pool.shutdown()
+    return best
+
+
+def probe_host_capacity(workers: int, *, size: int = 384,
+                        reps: int = 6) -> float:
+    """Capacity probe with a synthetic kernel (one compiled matmul) for
+    callers that have no workload in hand yet — the concurrent engine's
+    lazy calibration path.  Costs a few milliseconds once."""
+    x = np.random.default_rng(0).standard_normal(
+        (size, size)).astype(np.float32)
+    jitk = jax.jit(lambda a: a @ a)
+    dev = jax.device_put(x)
+    jax.block_until_ready(jitk(dev))            # compile, untimed
+    return parallel_capacity(
+        [lambda: jax.block_until_ready(jitk(dev))], workers, reps=reps)
+
+
 def profile_config_grid(runner: StreamedRunner, configs, *, reps: int = 3,
                         verbose: bool = False) -> dict[StreamConfig, float]:
     """Exhaustive profiling of a config grid (paper §3.1.2)."""
@@ -141,6 +195,30 @@ def profile_config_grid(runner: StreamedRunner, configs, *, reps: int = 3,
         if verbose:
             print(f"  {cfg.partitions:3d}x{cfg.tasks:<3d} {out[cfg]*1e3:8.3f} ms")
     return out
+
+
+def profile_grid_interleaved(runner: StreamedRunner, configs, *,
+                             sweeps: int = 3,
+                             prior: Union[dict, None] = None
+                             ) -> dict[StreamConfig, float]:
+    """Min-per-config over round-robin sweeps of the grid.
+
+    Interleaving beats back-to-back reps on shared boxes: a
+    neighbor-load spike spans one sweep's worth of configs, not every
+    sample of one config, so the per-config min survives it and the
+    argmin is not a lottery.  ``prior`` merges a previous profile of the
+    same configs (the oracle benchmark's before/after-serving passes).
+    This is THE measurement protocol for config selection — the serving
+    refiner and the oracle-regret benchmark both use it, so the
+    "achieved" and "oracle" sides of the regret ratio are measured
+    identically."""
+    best = dict(prior) if prior else {c: float("inf") for c in configs}
+    for c in configs:
+        runner.warmup(c)
+    for _ in range(max(1, sweeps)):
+        for c in configs:
+            best[c] = min(best[c], runner.run(c, reps=1, warmed=True))
+    return best
 
 
 def streamify_train_step(

@@ -16,7 +16,7 @@ import argparse
 import dataclasses
 import json
 import time
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,6 @@ from repro.core.stream_config import StreamConfig
 from repro.core.streams import streamify_train_step
 from repro.core.xla_cost import cost_analysis_dict
 from repro.launch.mesh import dp_axes_of, make_production_mesh
-from repro.models import transformer
 from repro.models.model_zoo import Model
 from repro.models.transformer import RunConfig
 from repro.optim import optimizer as opt_lib

@@ -131,17 +131,23 @@ def adaptive_serve(
     drift_threshold: float = 4.0,
     window: int = 1,
     workers: Optional[int] = None,
+    tenants: int = 0,
     seed: int = 0,
     verbose: bool = True,
 ) -> dict:
     """Serve ``n_requests`` of a mixed multi-tenant trace adaptively.
 
     ``window > 1`` serves through the concurrent engine with that many
-    requests in flight (drift thresholds then judge wall time under
-    contention — keep them loose).  Returns the telemetry summary dict
-    (requests, hit rate, refinements, mean prediction error); the
-    per-request JSONL stream lands at ``telemetry_path`` when given, and
-    new tuning-cache entries persist to ``cache_path``.
+    requests in flight; its drift signal is load-aware (measured wall
+    time is normalized by window occupancy over host capacity before
+    error computation), so thresholds need no loosening for contention.
+    ``tenants > 0`` names that many tenants AND isolates them: each gets
+    its own tuning-cache namespace, drift windows, and (on first refit)
+    a private model fork; ``tenants=0`` keeps the legacy two-tenant
+    shared-state trace.  Returns the telemetry summary dict (requests,
+    hit rate, refinements, per-tenant breakdown, mean prediction
+    error); the per-request JSONL stream lands at ``telemetry_path``
+    when given, and new tuning-cache entries persist to ``cache_path``.
     """
     from repro.core.autotuner import TuningCache
     from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
@@ -150,12 +156,15 @@ def adaptive_serve(
 
     occurrences = -(-n_requests // len(workloads))  # ceil
     trace = make_trace(list(workloads), occurrences=occurrences,
+                       tenants=tenants if tenants > 0
+                       else ("tenant-a", "tenant-b"),
                        seed=seed)[:n_requests]
     common = dict(
         backend=backend, policy=policy,
         cache=TuningCache(cache_path),
         telemetry=TelemetryLog(telemetry_path),
         drift=DriftDetector(threshold=drift_threshold),
+        isolate_tenants=tenants > 0,
         keep_outputs=False)
     if window > 1:
         sched = ConcurrentScheduler(OverlapHeuristicModel(),
@@ -163,30 +172,34 @@ def adaptive_serve(
                                     **common)
     else:
         sched = AdaptiveScheduler(OverlapHeuristicModel(), **common)
-    sched.submit_all(trace)
-    t0 = time.perf_counter()
-    results = sched.run()
-    wall = time.perf_counter() - t0
-    if verbose:
-        # progress goes to stderr so `--adaptive > summary.json` stays
-        # valid JSON
-        for r in results:
-            print(f"  #{r.sample.seq:<3d} {r.request.tenant:10s} "
-                  f"{r.request.workload:12s} "
-                  f"{r.config.partitions}x{r.config.tasks} "
-                  f"{'hit ' if r.cache_hit else 'cold'} "
-                  f"measured={r.measured_s*1e6:8.0f}us"
-                  + (f" predicted={r.predicted_s*1e6:8.0f}us"
-                     if r.predicted_s else ""), file=sys.stderr)
-    summary = sched.telemetry.summary()
-    summary["wall_s"] = wall
-    summary["backend"] = backend
-    summary["policy"] = policy
-    summary["window"] = window
-    summary["throughput_rps"] = n_requests / max(wall, 1e-12)
-    if cache_path:
-        sched.cache.save()
-    sched.telemetry.close()
+    # context-managed: telemetry is flushed/fsynced/closed even if the
+    # trace dies mid-flight, so artifact uploads never see a truncated
+    # last line
+    with sched:
+        sched.submit_all(trace)
+        t0 = time.perf_counter()
+        results = sched.run()
+        wall = time.perf_counter() - t0
+        if verbose:
+            # progress goes to stderr so `--adaptive > summary.json`
+            # stays valid JSON
+            for r in results:
+                print(f"  #{r.sample.seq:<3d} {r.request.tenant:10s} "
+                      f"{r.request.workload:12s} "
+                      f"{r.config.partitions}x{r.config.tasks} "
+                      f"{'hit ' if r.cache_hit else 'cold'} "
+                      f"measured={r.measured_s*1e6:8.0f}us"
+                      + (f" predicted={r.predicted_s*1e6:8.0f}us"
+                         if r.predicted_s else ""), file=sys.stderr)
+        summary = sched.telemetry.summary()
+        summary["wall_s"] = wall
+        summary["backend"] = backend
+        summary["policy"] = policy
+        summary["window"] = window
+        summary["isolate_tenants"] = tenants > 0
+        summary["throughput_rps"] = n_requests / max(wall, 1e-12)
+        if cache_path:
+            sched.cache.save()
     return summary
 
 
@@ -216,6 +229,10 @@ def main() -> None:
                          "the concurrent engine")
     ap.add_argument("--workers", type=int, default=None,
                     help="concurrent engine pool size (default: window)")
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="serve N isolated tenants (per-tenant cache "
+                         "namespace, drift windows, model fork on "
+                         "refit); 0 = legacy shared-state trace")
     args = ap.parse_args()
 
     if args.adaptive:
@@ -224,7 +241,7 @@ def main() -> None:
             n_requests=args.requests, backend=args.backend,
             policy=args.policy, telemetry_path=args.telemetry,
             cache_path=args.tuning_cache, window=args.window,
-            workers=args.workers)
+            workers=args.workers, tenants=args.tenants)
         print(json.dumps(summary, indent=2))
         return
 

@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import threading
 import time
 from typing import Optional
 
@@ -35,7 +34,6 @@ from repro.data.pipeline import DataConfig, PrefetchFeeder, SyntheticLM
 from repro.models.model_zoo import Model
 from repro.models.transformer import RunConfig
 from repro.optim import optimizer as opt_lib
-from repro.parallel.sharding_rules import AxisRules
 
 
 class StragglerWatchdog:

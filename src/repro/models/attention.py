@@ -8,7 +8,6 @@ kernel (repro.kernels.flash_attention) is validated against.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -16,7 +15,6 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding_rules import AxisRules
 
 # ---------------------------------------------------------------------------
 # RoPE

@@ -8,8 +8,6 @@ four entry points the launcher lowers:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -18,7 +16,6 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig, InputShape, get_arch
 from repro.models import layers, transformer
 from repro.models.transformer import RunConfig
-from repro.parallel.sharding_rules import AxisRules
 
 
 class Model:

@@ -12,7 +12,6 @@ stream keep them alive.  A load-balance auxiliary loss is returned.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

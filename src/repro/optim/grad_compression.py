@@ -8,12 +8,9 @@ quantization residual as error feedback added to the next step's gradient
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.experimental.shard_map import shard_map
-from jax.sharding import PartitionSpec as P
 
 
 def quantize_int8(g: jax.Array):

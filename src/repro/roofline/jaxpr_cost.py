@@ -18,7 +18,6 @@ Conventions:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import numpy as np

@@ -13,24 +13,30 @@ Lifecycle per request (see README "Adaptive serving"):
 The serial :class:`AdaptiveScheduler` runs that pipeline one request at
 a time; :class:`ConcurrentScheduler` (``engine.py``) overlaps up to
 ``window`` requests on a bounded worker pool with batched cold-path
-model searches and pooled execution contexts.
+model searches, pooled execution contexts, and a load-aware drift
+signal (``measured_s`` normalized by window occupancy over the host's
+calibrated parallel capacity).  ``isolate_tenants=True`` gives every
+tenant its own cache namespace, drift windows, and — on first refit — a
+private fork of the shared base model (``tenancy.py``).
 """
 from repro.serving.engine import (ConcurrentScheduler, ContextPool,
                                   OrderedRetirer)
 from repro.serving.queue import POLICIES, RequestQueue, WorkloadRequest
 from repro.serving.refinement import (DriftDetector, RefinementResult,
-                                      Refiner)
+                                      Refiner, contention_factor)
 from repro.serving.scheduler import (AdaptiveScheduler,
                                      OverlapHeuristicModel, PendingRequest,
                                      RequestResult, make_trace)
 from repro.serving.telemetry import (TelemetryLog, TelemetrySample,
                                      relative_error)
+from repro.serving.tenancy import TenantContext, TenantRegistry
 
 __all__ = [
     "POLICIES", "RequestQueue", "WorkloadRequest",
-    "DriftDetector", "RefinementResult", "Refiner",
+    "DriftDetector", "RefinementResult", "Refiner", "contention_factor",
     "AdaptiveScheduler", "OverlapHeuristicModel", "PendingRequest",
     "RequestResult", "make_trace",
     "ConcurrentScheduler", "ContextPool", "OrderedRetirer",
     "TelemetryLog", "TelemetrySample", "relative_error",
+    "TenantContext", "TenantRegistry",
 ]

@@ -36,11 +36,15 @@ swapping in each request's buffers instead of rebuilding a
 Measurement discipline: cold-path profiling (feature extraction, the
 single-stream anchor of a persisted warm hit) drains the in-flight
 window first, so the numbers persisted into the tuning cache and the
-prediction anchor are measured on an idle pool.  ``measured_s`` itself,
-though, is wall time under concurrency — contention inflates it relative
-to an isolated run, so drift thresholds should be looser than in serial
-mode (refinement re-profiles on the coordinator while workers keep
-executing).
+prediction anchor are measured on an idle pool.  ``measured_s`` itself
+is wall time under concurrency — contention inflates it relative to an
+isolated run — so the drift signal is **load-aware**: each dispatch is
+stamped with its window occupancy, and at retire time ``measured_s`` is
+divided by ``contention_factor(inflight, parallel_capacity, workers)``
+(occupancy over the host's calibrated thread-scaling ceiling) before
+the prediction error is computed.  Overlap inflation therefore no
+longer masquerades as model drift; ``load_aware=False`` restores the
+raw-wall-time signal for A/B measurement.
 """
 from __future__ import annotations
 
@@ -51,9 +55,10 @@ from typing import Optional
 
 from repro.core.backends import ExecutionContext
 from repro.core.backends.host_threads import WindowedPool
-from repro.core.streams import StreamedRunner
+from repro.core.streams import StreamedRunner, probe_host_capacity
 from repro.core.workloads import get_workload
 from repro.serving.queue import WorkloadRequest
+from repro.serving.refinement import contention_factor
 from repro.serving.scheduler import (AdaptiveScheduler, PendingRequest,
                                      RequestResult)
 
@@ -129,7 +134,9 @@ class ConcurrentScheduler(AdaptiveScheduler):
     workers, so all scheduler state mutation stays single-threaded."""
 
     def __init__(self, model, *, window: int = 4,
-                 workers: Optional[int] = None, **kwargs):
+                 workers: Optional[int] = None,
+                 capacity: Optional[float] = None,
+                 load_aware: bool = True, **kwargs):
         super().__init__(model, **kwargs)
         assert window >= 1, window
         self.window = window
@@ -137,6 +144,28 @@ class ConcurrentScheduler(AdaptiveScheduler):
         self.pool = WindowedPool(self.workers, window, name="serve-engine")
         self.ctx_pool = ContextPool()
         self.retirer = OrderedRetirer()
+        # load-aware drift: ``capacity`` is the host's measured
+        # N-thread kernel-scaling ceiling (see
+        # core.streams.parallel_capacity).  None → calibrated by a
+        # one-off probe at ``run()`` entry, while the pool is idle.
+        # ``load_aware=False`` reverts to raw-wall-time drift (the
+        # pre-tenancy behavior, kept for A/B measurement).
+        self.load_aware = load_aware
+        self._capacity = capacity
+        # drift-triggered refinements queue here and re-profile at the
+        # next pool-quiesce point (the runner is held un-released until
+        # then): profiling on a busy pool would write contention-skewed
+        # measured speedups into the cache — the exact poisoning the
+        # load-aware drift signal exists to prevent
+        self._deferred_refinements: list = []
+
+    @property
+    def parallel_capacity(self) -> float:
+        """The calibrated thread-scaling ceiling the contention factor
+        divides by; probed once on first use when not injected."""
+        if self._capacity is None:
+            self._capacity = max(1.0, probe_host_capacity(self.workers))
+        return self._capacity
 
     # -- pooled runners -------------------------------------------------------
 
@@ -148,6 +177,36 @@ class ConcurrentScheduler(AdaptiveScheduler):
 
     def _release_runner(self, runner: StreamedRunner) -> None:
         self.ctx_pool.release(runner.wl.name, runner.ctx)
+
+    # -- load-aware drift -----------------------------------------------------
+
+    def _load_factor(self, pending: PendingRequest) -> float:
+        """Occupancy over capacity: a request that shared the window
+        with others has its ``measured_s`` deflated back to an isolated-
+        run estimate before drift detection sees it.  An uncontended
+        request (``inflight == 1``) never pays the calibration probe."""
+        if not self.load_aware or pending.inflight <= 1:
+            return 1.0
+        return contention_factor(pending.inflight, self.parallel_capacity,
+                                 self.workers)
+
+    def _refine(self, pending, ctx, key, entry) -> None:
+        """Defer the re-profiling to the next quiesce point; the
+        triggering request's runner is kept leased until then so the
+        refiner measures this request's own buffers, not a recycled
+        context's."""
+        pending.defer_release = True
+        self._deferred_refinements.append((pending, ctx, key, entry))
+
+    def _flush_refinements(self) -> None:
+        """Run queued refinements on the now-idle pool (callers drain
+        first), then release the held runners."""
+        while self._deferred_refinements:
+            pending, ctx, key, entry = self._deferred_refinements.pop(0)
+            try:
+                super()._refine(pending, ctx, key, entry)
+            finally:
+                self._release_runner(pending.runner)
 
     # -- the overlapped serving loop ------------------------------------------
 
@@ -190,7 +249,10 @@ class ConcurrentScheduler(AdaptiveScheduler):
                     continue
                 rp, routs, rmeasured = flushed
                 results[rp.order] = self._retire(rp, routs, rmeasured)
-                self._release_runner(rp.runner)
+                # a retire that triggered a refinement keeps its runner
+                # leased until the deferred re-profiling has run
+                if not rp.defer_release:
+                    self._release_runner(rp.runner)
         return error
 
     def _drain(self, inflight: dict,
@@ -208,16 +270,36 @@ class ConcurrentScheduler(AdaptiveScheduler):
         inflight: dict = {}                  # future -> PendingRequest
         decided = 0
 
+        # calibrate the contention ceiling NOW, while nothing is in
+        # flight: a lazy probe at the first contended retire would time
+        # itself against the engine's own busy workers and cache a
+        # permanently understated capacity (overstated load factors,
+        # masked real drift)
+        if self.load_aware and self.window > 1 and self._capacity is None:
+            _ = self.parallel_capacity
+
         def budget_left() -> bool:
             return max_requests is None or decided < max_requests
 
         def check(error: Optional[BaseException]) -> None:
             if error is not None:
-                # finish the survivors cleanly, then surface the failure
+                # finish the survivors cleanly, then surface the failure;
+                # queued refinements are abandoned (their runners still
+                # go back to the pool), not profiled mid-error
                 self._drain(inflight, results)
+                for p, *_ in self._deferred_refinements:
+                    self._release_runner(p.runner)
+                self._deferred_refinements.clear()
                 raise error
 
         while (self.queue and budget_left()) or inflight:
+            # drift refinements queued by the last retire wave run FIRST,
+            # on a drained pool, so (a) their re-profiling is measured
+            # idle and (b) the decisions below see the refreshed cache
+            # entry — the same visibility inline refinement had
+            if self._deferred_refinements:
+                check(self._drain(inflight, results))
+                self._flush_refinements()
             # decide: fill the free window slots in queue-policy order
             batch: list[PendingRequest] = []
             while (self.queue and budget_left()
@@ -239,9 +321,17 @@ class ConcurrentScheduler(AdaptiveScheduler):
                 self._tune_cold(colds[0])
             elif colds:
                 self._tune_cold_batch(colds)
-            # dispatch
+            # dispatch: stamp each request's window occupancy — the
+            # load-aware drift signal's numerator.  The whole wave is in
+            # flight together (submits are microseconds, executions are
+            # milliseconds), so every member gets the post-dispatch
+            # occupancy; stamping len(inflight)+1 per submit would leave
+            # the wave's FIRST request marked uncontended and its
+            # contention-inflated wall time reading as drift
+            occupancy = len(inflight) + len(batch)
             for p in batch:
                 p.bucket_idx = self.retirer.issue(p.key)
+                p.inflight = occupancy
                 inflight[self.pool.submit(self._execute, p)] = p
             if not inflight:
                 continue
@@ -249,6 +339,7 @@ class ConcurrentScheduler(AdaptiveScheduler):
             done, _ = wait(inflight, return_when=FIRST_COMPLETED)
             check(self._retire_completed(done, inflight, results))
 
+        self._flush_refinements()          # pool is idle: nothing in flight
         assert self.retirer.held == 0, "completions left unretired"
         assert not inflight, "futures left in flight"
         self.stats["ctx_reuses"] = self.ctx_pool.reuses
@@ -258,5 +349,10 @@ class ConcurrentScheduler(AdaptiveScheduler):
         (result,) = self.run(max_requests=1)
         return result
 
-    def shutdown(self) -> None:
+    def close(self) -> None:
+        """Worker-pool shutdown + telemetry flush/fsync/close."""
         self.pool.shutdown()
+        super().close()
+
+    def shutdown(self) -> None:
+        self.close()

@@ -19,7 +19,6 @@ import collections
 import dataclasses
 import heapq
 import itertools
-from typing import Optional
 
 POLICIES = ("fifo", "priority", "fair")
 
@@ -79,6 +78,22 @@ class RequestQueue:
     def peek_tenants(self) -> list[str]:
         """Tenants with queued work, in service order (fair policy)."""
         return list(self._rr)
+
+    def pending_by_tenant(self) -> dict[str, int]:
+        """Queued-request count per tenant, any policy — the serving
+        dashboards' fairness view.  Under ``fair`` this is exactly the
+        per-tenant backlog the round-robin rotation drains one-at-a-time:
+        in any stretch where every tenant stays non-empty, each tenant is
+        served exactly once per rotation (asserted in the tenancy
+        tests)."""
+        if self.policy == "fair":
+            return {t: len(d) for t, d in self._per_tenant.items()}
+        counts: dict[str, int] = {}
+        items = (self._fifo if self.policy == "fifo"
+                 else (entry[2] for entry in self._heap))
+        for req in items:
+            counts[req.tenant] = counts.get(req.tenant, 0) + 1
+        return counts
 
     def __len__(self) -> int:
         if self.policy == "fifo":

@@ -34,7 +34,7 @@ from repro.core.perf_model import assemble_rows
 from repro.core.search import search_best
 from repro.core.stream_config import SINGLE_STREAM, StreamConfig, \
     default_space
-from repro.core.streams import StreamedRunner
+from repro.core.streams import StreamedRunner, profile_grid_interleaved
 
 
 class DriftDetector:
@@ -82,6 +82,37 @@ class DriftDetector:
         self._errors.pop(key, None)
         self._cooldowns[key] = self.cooldown
 
+    def clone(self) -> "DriftDetector":
+        """A fresh detector with the same thresholds and EMPTY windows —
+        the per-tenant template instantiation: every tenant judges drift
+        by the same rules but over only its own samples."""
+        return DriftDetector(window=self.window, threshold=self.threshold,
+                             min_samples=self.min_samples,
+                             cooldown=self.cooldown)
+
+
+def contention_factor(inflight: int, capacity: Optional[float],
+                      workers: Optional[int] = None) -> float:
+    """Expected wall-time inflation of one request that shared the host
+    with ``inflight - 1`` others (itself included in ``inflight``).
+
+    If aggregate kernel throughput scales by ``capacity`` when issued
+    from many threads (the :func:`repro.core.streams.parallel_capacity`
+    ceiling), then ``k`` concurrently executing requests each run
+    ``k / capacity`` slower than they would alone.  ``workers`` caps
+    ``k`` — only that many execute at once regardless of window
+    occupancy.  Clamped at 1.0: overlap never *deflates* a measurement,
+    and the serial scheduler (``inflight=1``) is always factor 1.
+
+    This is the load-aware drift signal's core arithmetic: dividing
+    ``measured_s`` by this factor before computing relative prediction
+    error stops concurrent-mode contention from masquerading as model
+    drift."""
+    if capacity is None:
+        return 1.0
+    eff = min(inflight, workers) if workers else inflight
+    return max(1.0, eff / max(capacity, 1e-9))
+
 
 @dataclasses.dataclass
 class RefinementResult:
@@ -113,7 +144,14 @@ class Refiner:
 
     def refine(self, runner: StreamedRunner, key: str,
                prog_feats: Optional[np.ndarray],
-               current: Optional[TuneResult]) -> RefinementResult:
+               current: Optional[TuneResult], *,
+               model=None) -> RefinementResult:
+        """Re-profile and refresh ``key``.  ``model`` overrides the
+        refiner's default for both the top-k search and the refit — the
+        tenancy hook: an isolating scheduler passes the drifting
+        tenant's own (forked) model so measured feedback never refits a
+        model other tenants serve from."""
+        model = model if model is not None else self.model
         t0 = time.perf_counter()
         if prog_feats is None:
             # hit on a persisted cache from a previous process: the raw
@@ -126,20 +164,20 @@ class Refiner:
         cands = [c for c in self.candidates
                  if c.partitions * c.tasks <= n_rows] or [SINGLE_STREAM]
         k = min(self.top_k, len(cands))
-        picks, _, _ = search_best(self.model, prog_feats, cands, top_k=k)
+        picks, _, _ = search_best(model, prog_feats, cands, top_k=k)
         if k == 1:
             picks = [picks]
         probe = list(dict.fromkeys(
-            [*picks]
-            + ([current.config] if current is not None else [])
-            + [SINGLE_STREAM]))
+            [SINGLE_STREAM]
+            + [*picks]
+            + ([current.config] if current is not None else [])))
 
         self.cache.invalidate(key)
-        t_single = runner.run(SINGLE_STREAM, reps=self.reps)
-        measured = {SINGLE_STREAM: t_single}
-        for cfg in probe:
-            if cfg != SINGLE_STREAM:
-                measured[cfg] = runner.run(cfg, reps=self.reps)
+        # interleaved sweeps, not back-to-back reps — the shared
+        # spike-resistant protocol (see streams.profile_grid_interleaved)
+        measured = profile_grid_interleaved(runner, probe,
+                                            sweeps=self.reps)
+        t_single = measured[SINGLE_STREAM]
         best = min(measured, key=measured.get)
         speedup = t_single / max(measured[best], 1e-12)
 
@@ -148,13 +186,13 @@ class Refiner:
             backend=runner.backend.name, source="refined"))
 
         refit_loss = None
-        if hasattr(self.model, "refit"):
+        if hasattr(model, "refit"):
             rows = assemble_rows(prog_feats, list(measured))
             ys = np.array([t_single / max(measured[c], 1e-12)
                            for c in measured])
-            refit_loss = self.model.refit(rows, ys,
-                                          epochs=self.refit_epochs,
-                                          lr=self.refit_lr)
+            refit_loss = model.refit(rows, ys,
+                                     epochs=self.refit_epochs,
+                                     lr=self.refit_lr)
 
         result = RefinementResult(
             key=key,

@@ -41,6 +41,7 @@ from repro.serving.queue import RequestQueue, WorkloadRequest
 from repro.serving.refinement import DriftDetector, Refiner
 from repro.serving.telemetry import TelemetryLog, TelemetrySample, \
     relative_error
+from repro.serving.tenancy import TenantContext, TenantRegistry
 
 _I_T_SINGLE = RAW_FEATURE_NAMES.index("t_single_us")
 _I_T_XFER = RAW_FEATURE_NAMES.index("t_transfer_us")
@@ -107,6 +108,11 @@ class PendingRequest:
     needs_anchor: bool = False     # warm persisted hit, anchor unprofiled
     order: int = -1                # global decision order
     bucket_idx: int = -1           # per-bucket dispatch index
+    tenant_ctx: Optional[TenantContext] = None
+    inflight: int = 1              # window occupancy at dispatch (engine)
+    load_factor: float = 1.0       # contention normalization, set at retire
+    defer_release: bool = False    # engine: runner held for a deferred
+                                   # refinement, released after it runs
 
 
 class AdaptiveScheduler:
@@ -122,6 +128,8 @@ class AdaptiveScheduler:
                  drift: Optional[DriftDetector] = None,
                  refiner: Optional[Refiner] = None,
                  model_tag: str = "",
+                 isolate_tenants: bool = False,
+                 tenants: Optional[TenantRegistry] = None,
                  warm_before_measure: bool = True,
                  keep_outputs: bool = True):
         self.model = model
@@ -133,6 +141,13 @@ class AdaptiveScheduler:
         self.drift = drift if drift is not None else DriftDetector()
         self.refiner = refiner if refiner is not None else Refiner(
             model, self.cache, candidates=self.candidates)
+        # tenant isolation: with ``isolate_tenants`` every tenant gets a
+        # private cache namespace, drift windows, and (on first refit) a
+        # fork of the shared base model.  Off by default — the registry
+        # then resolves every tenant to ONE shared context whose drift
+        # detector is ``self.drift``, i.e. the pre-tenancy behavior.
+        self.tenancy = tenants if tenants is not None else TenantRegistry(
+            model, self.drift, isolate=isolate_tenants)
         self.model_tag = model_tag
         self.warm_before_measure = warm_before_measure
         self.keep_outputs = keep_outputs
@@ -210,10 +225,13 @@ class AdaptiveScheduler:
         means the request is cold and needs a tune before dispatch."""
         runner = self._make_runner(req)
         n_rows = next(iter(req.chunked.values())).shape[0]
+        ctx = self.tenancy.get(req.tenant)
         key = self.cache.key(runner.wl.name, req.chunked, req.shared,
-                             self.backend_name, self.model_tag)
+                             self.backend_name, self.model_tag,
+                             namespace=ctx.namespace)
         pending = PendingRequest(req=req, runner=runner, key=key,
-                                 n_rows=n_rows, order=self._order)
+                                 n_rows=n_rows, order=self._order,
+                                 tenant_ctx=ctx)
         self._order += 1
         hit = self.cache.get(key, valid=lambda r: (
             r.config.partitions * r.config.tasks <= n_rows))
@@ -253,12 +271,20 @@ class AdaptiveScheduler:
             float(feats.values[_I_T_SINGLE]) * 1e-6
         return feats.values
 
+    def _model_for(self, pending: PendingRequest):
+        """The model that ranks configs for this request: the tenant's
+        fork once it has refitted, the shared base before that."""
+        if pending.tenant_ctx is not None:
+            return pending.tenant_ctx.active_model
+        return self.model
+
     def _tune_cold(self, pending: PendingRequest) -> TuneResult:
         t0 = time.perf_counter()
         feats = self._extract(pending)
         t_feat = time.perf_counter() - t0
         cands = self._feasible_configs(pending.n_rows)
-        best, preds, t_search = search_best(self.model, feats, cands)
+        best, preds, t_search = search_best(self._model_for(pending),
+                                            feats, cands)
         self.stats["model_searches"] += 1
         result = TuneResult(best, float(np.max(preds)), t_feat, t_search,
                             backend=self.backend_name, source="model")
@@ -275,7 +301,12 @@ class AdaptiveScheduler:
         Per-request feasibility (row counts differ across buckets) is a
         ``-inf`` mask into the shared prediction matrix, which keeps each
         pick identical to what a serial ``search_best`` over that
-        request's filtered candidates would have returned."""
+        request's filtered candidates would have returned.
+
+        Tenant isolation: buckets are grouped by the model that must
+        rank them — tenants that have forked search with their own
+        model, so one batched search per DISTINCT model (one total until
+        any tenant forks)."""
         # one representative pending per unique bucket, first-seen order
         by_key: dict[str, PendingRequest] = {}
         for p in pendings:
@@ -287,23 +318,34 @@ class AdaptiveScheduler:
         t_feat = time.perf_counter() - t0
         feasible = np.stack([self._cand_cost <= p.n_rows for p in uniques])
 
-        picks, best_preds, _, t_search = search_best_batch(
-            self.model, F, self.candidates, feasible=feasible)
-        self.stats["model_searches"] += 1
-        self.stats["batched_searches"] += 1
-        self.stats["batched_search_programs"] += len(uniques)
+        groups: dict[int, list[int]] = {}
+        for i, p in enumerate(uniques):
+            groups.setdefault(id(self._model_for(p)), []).append(i)
 
-        per_b = 1.0 / len(uniques)
-        for p, pick, pred in zip(uniques, picks, best_preds):
-            if not np.isfinite(pred):          # every candidate infeasible
-                pick, pred = SINGLE_STREAM, float(
-                    self.model.predict_configs(self._feats[p.key],
-                                               [SINGLE_STREAM])[0])
-            result = TuneResult(pick, float(pred), t_feat * per_b,
-                                t_search * per_b,
-                                backend=self.backend_name, source="model")
-            self.cache.put(p.key, result)
-            p.entry = result
+        # feature time was paid once across ALL uniques; search time is
+        # per model-group — each term amortized over what it covered
+        per_feat = t_feat / len(uniques)
+        for idxs in groups.values():
+            model = self._model_for(uniques[idxs[0]])
+            picks, best_preds, _, t_search = search_best_batch(
+                model, F[idxs], self.candidates, feasible=feasible[idxs])
+            self.stats["model_searches"] += 1
+            self.stats["batched_searches"] += 1
+            self.stats["batched_search_programs"] += len(idxs)
+            per_search = t_search / len(idxs)
+
+            for i, pick, pred in zip(idxs, picks, best_preds):
+                p = uniques[i]
+                if not np.isfinite(pred):      # every candidate infeasible
+                    pick, pred = SINGLE_STREAM, float(
+                        model.predict_configs(self._feats[p.key],
+                                              [SINGLE_STREAM])[0])
+                result = TuneResult(pick, float(pred), per_feat,
+                                    per_search,
+                                    backend=self.backend_name,
+                                    source="model")
+                self.cache.put(p.key, result)
+                p.entry = result
         # same-bucket duplicates inside one batch are warm hits on the
         # representative's fresh entry — unless their own row count makes
         # that config unsplittable (possible within one shape-bucket
@@ -344,26 +386,41 @@ class AdaptiveScheduler:
 
     # -- stage 3: retire ------------------------------------------------------
 
+    def _load_factor(self, pending: PendingRequest) -> float:
+        """Contention normalization for the drift signal; 1.0 on the
+        serial scheduler (nothing overlaps).  The concurrent engine
+        overrides this with in-flight occupancy over the host's measured
+        parallel capacity."""
+        return 1.0
+
     def _retire(self, pending: PendingRequest, outs: list,
                 measured_s: float) -> RequestResult:
         """Telemetry + drift + refinement.  Runs on the coordinating
         thread only — per-bucket ordering of drift observations is the
         engine's contract, and the refiner re-profiles on the pending
-        request's own runner."""
+        request's own runner.
+
+        The drift signal is load-aware: ``measured_s`` is divided by the
+        contention factor (window occupancy / host parallel capacity)
+        before the prediction error is computed, so concurrent-mode
+        overlap inflation does not masquerade as model drift.  Drift is
+        observed on the request tenant's own windows, and a triggered
+        refinement refits the tenant's fork of the model — never the
+        shared base another tenant serves from."""
         req, key, entry = pending.req, pending.key, pending.entry
+        ctx = pending.tenant_ctx if pending.tenant_ctx is not None \
+            else self.tenancy.get(req.tenant)
         config = entry.config
         predicted_s = self._predicted_runtime(key, entry)
-        rel = relative_error(measured_s, predicted_s)
+        load = self._load_factor(pending)
+        pending.load_factor = load
+        measured_norm_s = measured_s / load
+        rel = relative_error(measured_norm_s, predicted_s)
 
         refined = False
-        if self.drift.observe(key, rel):
-            refinement = self.refiner.refine(pending.runner, key,
-                                             self._feats.get(key), entry)
-            # recalibrate the runtime anchor from the refinement's own
-            # measured single-stream run
-            self._t_single[key] = refinement.t_single_s
-            self.drift.reset(key)
-            self.stats["refinements"] += 1
+        if ctx.drift.observe(key, rel):
+            ctx.drift.reset(key)
+            self._refine(pending, ctx, key, entry)
             refined = True
 
         self._seq += 1
@@ -372,18 +429,37 @@ class AdaptiveScheduler:
             key=key, backend=self.backend_name, partitions=config.partitions,
             tasks=config.tasks, cache_hit=pending.cache_hit,
             predicted_s=predicted_s, measured_s=measured_s, rel_error=rel,
-            refined=refined, source=entry.source)
+            refined=refined, source=entry.source,
+            inflight=pending.inflight, load_factor=load,
+            measured_norm_s=measured_norm_s)
         self.telemetry.append(sample)
 
         self.stats["requests"] += 1
         self.stats["cache_hits" if pending.cache_hit else "cold_misses"] += 1
         self.stats[f"tenant.{req.tenant}.served"] += 1
+        ctx.served += 1
 
         return RequestResult(
             request=req, config=config,
             outputs=outs if self.keep_outputs else [],
             measured_s=measured_s, predicted_s=predicted_s,
             cache_hit=pending.cache_hit, refined=refined, sample=sample)
+
+    def _refine(self, pending: PendingRequest, ctx: TenantContext,
+                key: str, entry: TuneResult) -> None:
+        """Run one drift-triggered refinement with the tenant's own
+        (forked) model and recalibrate the runtime anchor from the
+        refinement's measured single-stream run.  The serial scheduler
+        refines inline; the engine overrides this to DEFER the
+        re-profiling to its next pool-quiesce point, so refinement
+        measurements — like all profiling — happen on an idle pool."""
+        refinement = self.refiner.refine(
+            pending.runner, key, self._feats.get(key), entry,
+            model=ctx.fork_for_refit())
+        self._t_single[key] = refinement.t_single_s
+        self.stats["refinements"] += 1
+        self.stats[f"tenant.{pending.req.tenant}.refinements"] += 1
+        ctx.refinements += 1
 
     def _predicted_runtime(self, key: str,
                            entry: TuneResult) -> Optional[float]:
@@ -392,15 +468,34 @@ class AdaptiveScheduler:
             return None
         return t_single / entry.predicted_speedup
 
+    # -- teardown -------------------------------------------------------------
+
+    def close(self) -> None:
+        """Deterministic teardown: flush + fsync + close the telemetry
+        JSONL so a mid-trace shutdown never leaves a truncated last line
+        for CI artifact uploads.  Idempotent; the engine extends this
+        with its worker-pool shutdown."""
+        self.telemetry.close()
+
+    def __enter__(self) -> "AdaptiveScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
 
 def make_trace(workloads: Sequence[str], *, occurrences: int = 2,
-               tenants: Sequence[str] = ("tenant-a", "tenant-b"),
+               tenants=("tenant-a", "tenant-b"),
                scale_index: int = 0, seed: int = 0,
                priorities: Optional[Sequence[int]] = None
                ) -> list[WorkloadRequest]:
     """A deterministic mixed-workload request trace: ``occurrences``
     rounds over ``workloads``, data re-drawn per request (same shapes, so
-    later rounds land in the same tuning bucket), tenants round-robin."""
+    later rounds land in the same tuning bucket), tenants round-robin.
+    ``tenants`` is a sequence of names, or an int N for
+    ``tenant-0 .. tenant-{N-1}``."""
+    if isinstance(tenants, int):
+        tenants = tuple(f"tenant-{i}" for i in range(tenants))
     rng = np.random.default_rng(seed)
     reqs = []
     for round_idx in range(occurrences):

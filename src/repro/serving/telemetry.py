@@ -35,6 +35,17 @@ class TelemetrySample:
     rel_error: Optional[float]    # |measured - predicted| / predicted
     refined: bool = False         # this request triggered a refinement
     source: str = "model"         # config provenance: model | refined
+    # -- load-aware drift fields (concurrent engine) ----------------------
+    #: window occupancy when this request was dispatched (itself included);
+    #: 1 under the serial scheduler
+    inflight: int = 1
+    #: contention factor measured_s was divided by before computing the
+    #: drift signal: max(1, min(inflight, workers) / host parallel
+    #: capacity); 1.0 when serving serially or load-awareness is off
+    load_factor: float = 1.0
+    #: measured_s / load_factor — the contention-normalized runtime that
+    #: rel_error (and therefore drift detection) is computed from
+    measured_norm_s: Optional[float] = None
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -53,7 +64,14 @@ def relative_error(measured_s: float,
 
 
 class TelemetryLog:
-    """In-memory sample list, mirrored to an append-only JSONL file."""
+    """In-memory sample list, mirrored to an append-only JSONL file.
+
+    Usable as a context manager; ``close()`` flushes AND fsyncs before
+    closing, and is idempotent.  A serving process torn down mid-trace
+    (CI job timeout, SIGTERM between requests) must never leave a
+    truncated last line for the artifact upload to capture — ``append``
+    already flushes per line, but only fsync pushes the page cache to
+    disk before the process dies."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
@@ -73,8 +91,23 @@ class TelemetryLog:
 
     def close(self) -> None:
         if self._fh is not None:
+            try:
+                self._fh.flush()
+                os.fsync(self._fh.fileno())
+            except (OSError, ValueError):
+                pass                  # already closed / non-seekable sink
             self._fh.close()
             self._fh = None
+
+    @property
+    def closed(self) -> bool:
+        return self._fh is None
+
+    def __enter__(self) -> "TelemetryLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
     def __len__(self) -> int:
         return len(self.samples)
@@ -101,6 +134,16 @@ class TelemetryLog:
         for s in self.samples:
             if s.rel_error is not None:
                 per_workload.setdefault(s.workload, []).append(s.rel_error)
+        per_tenant: dict[str, dict] = {}
+        for s in self.samples:
+            t = per_tenant.setdefault(
+                s.tenant, {"requests": 0, "cache_hits": 0,
+                           "refinements": 0, "errors": []})
+            t["requests"] += 1
+            t["cache_hits"] += bool(s.cache_hit)
+            t["refinements"] += bool(s.refined)
+            if s.rel_error is not None:
+                t["errors"].append(s.rel_error)
         return {
             "requests": n,
             "cache_hits": hits,
@@ -110,4 +153,11 @@ class TelemetryLog:
             "mean_rel_error": (sum(errs) / len(errs)) if errs else None,
             "mean_rel_error_by_workload": {
                 w: sum(v) / len(v) for w, v in sorted(per_workload.items())},
+            "per_tenant": {
+                name: {"requests": t["requests"],
+                       "cache_hits": t["cache_hits"],
+                       "refinements": t["refinements"],
+                       "mean_rel_error": (sum(t["errors"]) / len(t["errors"])
+                                          if t["errors"] else None)}
+                for name, t in sorted(per_tenant.items())},
         }

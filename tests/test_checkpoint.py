@@ -1,9 +1,7 @@
 """Checkpointing: atomicity, versioning, GC, async, auto-resume, elastic."""
-import json
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,7 @@
 """Architecture config registry: exact specs + derived quantities."""
 import pytest
 
-from repro.configs.base import ALL_SHAPES, SHAPES, get_arch, list_archs
+from repro.configs.base import ALL_SHAPES, get_arch, list_archs
 
 EXPECTED = {
     # name: (layers, d_model, heads, kv, d_ff, vocab)

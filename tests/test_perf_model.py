@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.features import N_CONFIG_FEATURES, RAW_FEATURE_NAMES, config_features
+from repro.core.features import N_CONFIG_FEATURES, config_features
 from repro.core.perf_model import (FeaturePipeline, ForestRegressor,
                                    KernelRidgeRBF, PerformanceModel,
                                    TreeRegressor)

@@ -7,7 +7,7 @@ import pytest
 
 from repro.core.stream_config import SINGLE_STREAM, StreamConfig, default_space, dense_space
 from repro.core.streams import StreamedRunner, _split, streamify_train_step
-from repro.core.workloads import get_workload, list_workloads
+from repro.core.workloads import get_workload
 
 
 def _outputs(runner, config):

@@ -1,8 +1,6 @@
 """End-to-end behaviour tests: the full training/serving systems plus the
 paper's pipeline (profile -> features -> model -> search -> config) on
 live workloads."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
