@@ -3,7 +3,7 @@ JSON against the committed baseline and fail CI on a real regression.
 
     python benchmarks/check_regression.py FRESH BASELINE [--tolerance 0.25]
 
-Works on both serving benchmark artifacts:
+Works on all three benchmark artifacts:
 
   BENCH_serving.json  (``--serve-concurrent``)  gated on
       ``capacity_fraction`` — the engine's speedup normalized by the SAME
@@ -14,6 +14,11 @@ Works on both serving benchmark artifacts:
   BENCH_oracle.json   (``--serve-oracle``)      gated on
       ``mean_regret`` — achieved/oracle runtime ratio, already a ratio of
       two measurements taken on the same box under the same load regime.
+  BENCH_model.json    (``--model-eval``)        gated on
+      ``model_frac_of_oracle`` (LOO-CV achieved/oracle speedup of the
+      trained model) and ``model_vs_heuristic`` (trained model vs the
+      zero-training stand-in on the same corpus) — both ratios of
+      measurements from one profiled grid, so host drift cancels.
 
 A metric regresses when ``fresh < baseline * (1 - tolerance)``.  The
 default 25% tolerance is deliberately loose for the same reason the
@@ -34,6 +39,10 @@ import sys
 GATED_METRICS = {
     "capacity_fraction": "engine speedup / host parallel-capacity ceiling",
     "mean_regret": "steady-state achieved/oracle runtime ratio",
+    "model_frac_of_oracle": "LOO-CV achieved/oracle speedup of the "
+                            "trained model",
+    "model_vs_heuristic": "trained-model / heuristic achieved speedup "
+                          "on the same corpus",
 }
 
 # context printed next to the verdict but never gated (absolute numbers

@@ -1,3 +1,8 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from pathlib import Path
+
+#: the repository checkout root — the single source for in-repo default
+#: paths (profile cache, model registry); env vars override per path
+REPO_ROOT = Path(__file__).resolve().parents[3]

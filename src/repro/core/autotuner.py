@@ -26,8 +26,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core import features as feat_lib
-from repro.core.perf_model import PerformanceModel
-from repro.core.search import search_best
+from repro.core.modeling.perf_model import PerformanceModel
+from repro.core.modeling.search import search_best
 from repro.core.stream_config import StreamConfig, default_space
 from repro.core.streams import StreamedRunner
 from repro.core.workloads import Workload

@@ -1,0 +1,150 @@
+"""The learned performance model (paper §3) in pure JAX + numpy.
+
+Pipeline (faithful to §3.2.1-§3.2.2, §6.6.2-§6.6.3): the shared
+:class:`~repro.core.modeling.pipeline.FeaturePipeline` front end, then an
+MLP regression — 3 hidden layers x 9 neurons, tanh, adam — over
+(program features ++ config encoding) -> standardized speedup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.modeling.base import (EstimatorBase, assemble_rows,
+                                      register_estimator)
+from repro.core.modeling.pipeline import FeaturePipeline
+
+__all__ = ["PerformanceModel", "FeaturePipeline", "assemble_rows"]
+
+
+# ---------------------------------------------------------------------------
+# MLP (pure JAX)
+# ---------------------------------------------------------------------------
+
+
+def _init_mlp(key, in_dim: int, hidden: Sequence[int] = (9, 9, 9)):
+    dims = [in_dim, *hidden, 1]
+    params = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        w = jax.random.normal(k, (a, b)) * np.sqrt(2.0 / a)
+        params.append({"w": w, "b": jnp.zeros((b,))})
+    return params
+
+
+def _mlp_forward(params, x):
+    h = x
+    for layer in params[:-1]:
+        h = jnp.tanh(h @ layer["w"] + layer["b"])
+    out = h @ params[-1]["w"] + params[-1]["b"]
+    return out[..., 0]
+
+
+@jax.jit
+def _mse(params, X, y):
+    pred = _mlp_forward(params, X)
+    return jnp.mean((pred - y) ** 2)
+
+
+def _adam_train(params, X, y, *, lr=1e-2, epochs=600, seed=0):
+    opt_m = jax.tree.map(jnp.zeros_like, params)
+    opt_v = jax.tree.map(jnp.zeros_like, params)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+
+    @jax.jit
+    def step(i, params, m, v):
+        loss, g = jax.value_and_grad(_mse)(params, Xj, yj)
+        m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_**2, v, g)
+        mh = jax.tree.map(lambda m_: m_ / (1 - 0.9 ** (i + 1)), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - 0.999 ** (i + 1)), v)
+        params = jax.tree.map(
+            lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + 1e-8),
+            params, mh, vh)
+        return loss, params, m, v
+
+    loss = None
+    for i in range(epochs):
+        loss, params, opt_m, opt_v = step(i, params, opt_m, opt_v)
+    return params, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# The regression performance model (ours)
+# ---------------------------------------------------------------------------
+
+
+@register_estimator
+@dataclasses.dataclass
+class PerformanceModel(EstimatorBase):
+    pipeline: FeaturePipeline
+    mlp_params: list
+    hidden: tuple = (9, 9, 9)
+
+    kind = "mlp"
+
+    @staticmethod
+    def train(X_raw: np.ndarray, y_speedup: np.ndarray, *,
+              hidden=(9, 9, 9), n_components: int = 9, epochs: int = 600,
+              lr: float = 1e-2, seed: int = 0) -> "PerformanceModel":
+        """X_raw rows = program features ++ config encoding; y = speedup."""
+        pipe = FeaturePipeline.fit(X_raw, y_speedup, n_components=n_components)
+        X = pipe.transform(X_raw)
+        y = pipe.transform_y(y_speedup)
+        params = _init_mlp(jax.random.key(seed), X.shape[1], hidden)
+        params, _ = _adam_train(params, X, y, lr=lr, epochs=epochs, seed=seed)
+        return PerformanceModel(pipe, params, tuple(hidden))
+
+    def predict(self, X_raw: np.ndarray) -> np.ndarray:
+        X = self.pipeline.transform(np.atleast_2d(X_raw))
+        yn = np.asarray(_mlp_forward(self.mlp_params, jnp.asarray(X)))
+        return self.pipeline.inverse_y(yn)
+
+    def refit(self, X_raw: np.ndarray, y_speedup: np.ndarray, *,
+              epochs: int = 150, lr: float = 3e-3) -> float:
+        """Incremental online refit: continue adam from the current
+        parameters on freshly *measured* (features ++ config, speedup)
+        rows.  The feature pipeline stays frozen so the input space is
+        stable across refits; only the MLP moves.  This is the serving
+        drift-correction hook — a few hundred cheap steps on a handful of
+        rows, not a retrain.  Returns the final training loss."""
+        X = self.pipeline.transform(np.atleast_2d(np.asarray(X_raw, float)))
+        yn = self.pipeline.transform_y(
+            np.asarray(y_speedup, float).reshape(-1))
+        self.mlp_params, loss = _adam_train(self.mlp_params, X, yn,
+                                            lr=lr, epochs=epochs)
+        return float(loss)
+
+    def fork(self) -> "PerformanceModel":
+        """A refit-isolated copy sharing the frozen feature pipeline.
+
+        ``refit`` rebinds ``mlp_params`` to freshly built trees (adam
+        never mutates arrays in place), so copying the layer containers
+        is enough: the fork and the original diverge from the first
+        refit on either side.  This is the serving tenancy hook — every
+        tenant refits its own fork of the shared read-only base model."""
+        return PerformanceModel(self.pipeline,
+                                [dict(layer) for layer in self.mlp_params],
+                                self.hidden)
+
+    # -- artifact serialization ----------------------------------------------
+
+    def to_state(self) -> tuple[dict, dict]:
+        arrays = self.pipeline.to_arrays()
+        for i, layer in enumerate(self.mlp_params):
+            arrays[f"mlp.{i}.w"] = np.asarray(layer["w"])
+            arrays[f"mlp.{i}.b"] = np.asarray(layer["b"])
+        return arrays, {"hidden": list(self.hidden),
+                        "n_layers": len(self.mlp_params)}
+
+    @classmethod
+    def from_state(cls, arrays: dict, extras: dict) -> "PerformanceModel":
+        pipe = FeaturePipeline.from_arrays(arrays)
+        params = [{"w": jnp.asarray(arrays[f"mlp.{i}.w"]),
+                   "b": jnp.asarray(arrays[f"mlp.{i}.b"])}
+                  for i in range(int(extras["n_layers"]))]
+        return cls(pipe, params, tuple(extras["hidden"]))

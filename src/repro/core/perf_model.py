@@ -1,350 +1,11 @@
-"""The learned performance model (paper §3) in pure JAX + numpy.
+"""Back-compat shim: the model code moved to
+:mod:`repro.core.modeling` (perf_model / pipeline / learners).  Import
+from there; this module re-exports the public names so existing callers
+keep working."""
+from repro.core.modeling.base import assemble_rows
+from repro.core.modeling.learners import (ForestRegressor, KernelRidgeRBF,
+                                          TreeRegressor)
+from repro.core.modeling.perf_model import FeaturePipeline, PerformanceModel
 
-Pipeline (faithful to §3.2.1-§3.2.2, §6.6.2-§6.6.3):
-  raw program features ++ config encoding
-    -> Z-score standardization
-    -> correlation pruning (|Pearson rho| > 0.7 drops the later feature)
-    -> PCA (9 components; paper: "PCA with 9 components gives the best
-       overall result")
-    -> MLP regression, 3 hidden layers x 9 neurons, tanh, adam
-  target: speedup over single-stream, Z-score standardized.
-
-Alternative learners for the Table-5 comparison live here too: a CART
-regression tree, a bagged random forest, RBF kernel ridge regression (the
-closed-form stand-in for the paper's SVR — no sklearn offline), and
-k-nearest-neighbour / tree / MLP classifiers over merged config labels.
-"""
-from __future__ import annotations
-
-import dataclasses
-from typing import Optional, Sequence
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.features import config_feature_matrix
-
-# ---------------------------------------------------------------------------
-# Feature pipeline
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class FeaturePipeline:
-    mean: np.ndarray
-    std: np.ndarray
-    keep_idx: np.ndarray          # surviving columns after pruning
-    pca_components: np.ndarray    # (kept, n_comp)
-    pca_mean: np.ndarray
-    y_mean: float
-    y_std: float
-
-    @staticmethod
-    def fit(X: np.ndarray, y: np.ndarray, *, n_components: int = 9,
-            corr_threshold: float = 0.7) -> "FeaturePipeline":
-        mean = X.mean(axis=0)
-        std = X.std(axis=0)
-        std[std < 1e-12] = 1.0
-        Z = (X - mean) / std
-
-        # correlation pruning: keep the earlier feature of any |rho|>0.7 pair
-        n = Z.shape[1]
-        with np.errstate(divide="ignore", invalid="ignore"):
-            corr = np.corrcoef(Z, rowvar=False)
-        corr = np.nan_to_num(corr)
-        keep: list[int] = []
-        for j in range(n):
-            if all(abs(corr[j, i]) <= corr_threshold for i in keep):
-                keep.append(j)
-        keep_idx = np.array(keep, dtype=np.int64)
-        Zk = Z[:, keep_idx]
-
-        # PCA
-        n_comp = min(n_components, Zk.shape[1])
-        pca_mean = Zk.mean(axis=0)
-        Zc = Zk - pca_mean
-        _, _, vt = np.linalg.svd(Zc, full_matrices=False)
-        components = vt[:n_comp].T  # (kept, n_comp)
-
-        y_mean, y_std = float(y.mean()), float(max(y.std(), 1e-9))
-        return FeaturePipeline(mean, std, keep_idx, components, pca_mean,
-                               y_mean, y_std)
-
-    def transform(self, X: np.ndarray) -> np.ndarray:
-        Z = (X - self.mean) / self.std
-        Zk = Z[:, self.keep_idx]
-        return (Zk - self.pca_mean) @ self.pca_components
-
-    def transform_y(self, y: np.ndarray) -> np.ndarray:
-        return (y - self.y_mean) / self.y_std
-
-    def inverse_y(self, yn: np.ndarray) -> np.ndarray:
-        return yn * self.y_std + self.y_mean
-
-
-# ---------------------------------------------------------------------------
-# MLP (pure JAX)
-# ---------------------------------------------------------------------------
-
-
-def _init_mlp(key, in_dim: int, hidden: Sequence[int] = (9, 9, 9)):
-    dims = [in_dim, *hidden, 1]
-    params = []
-    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
-        key, k = jax.random.split(key)
-        w = jax.random.normal(k, (a, b)) * np.sqrt(2.0 / a)
-        params.append({"w": w, "b": jnp.zeros((b,))})
-    return params
-
-
-def _mlp_forward(params, x):
-    h = x
-    for layer in params[:-1]:
-        h = jnp.tanh(h @ layer["w"] + layer["b"])
-    out = h @ params[-1]["w"] + params[-1]["b"]
-    return out[..., 0]
-
-
-@jax.jit
-def _mse(params, X, y):
-    pred = _mlp_forward(params, X)
-    return jnp.mean((pred - y) ** 2)
-
-
-def _adam_train(params, X, y, *, lr=1e-2, epochs=600, seed=0):
-    opt_m = jax.tree.map(jnp.zeros_like, params)
-    opt_v = jax.tree.map(jnp.zeros_like, params)
-    Xj, yj = jnp.asarray(X), jnp.asarray(y)
-
-    @jax.jit
-    def step(i, params, m, v):
-        loss, g = jax.value_and_grad(_mse)(params, Xj, yj)
-        m = jax.tree.map(lambda m_, g_: 0.9 * m_ + 0.1 * g_, m, g)
-        v = jax.tree.map(lambda v_, g_: 0.999 * v_ + 0.001 * g_**2, v, g)
-        mh = jax.tree.map(lambda m_: m_ / (1 - 0.9 ** (i + 1)), m)
-        vh = jax.tree.map(lambda v_: v_ / (1 - 0.999 ** (i + 1)), v)
-        params = jax.tree.map(
-            lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + 1e-8),
-            params, mh, vh)
-        return loss, params, m, v
-
-    loss = None
-    for i in range(epochs):
-        loss, params, opt_m, opt_v = step(i, params, opt_m, opt_v)
-    return params, float(loss)
-
-
-# ---------------------------------------------------------------------------
-# The regression performance model (ours)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class PerformanceModel:
-    pipeline: FeaturePipeline
-    mlp_params: list
-    hidden: tuple = (9, 9, 9)
-
-    @staticmethod
-    def train(X_raw: np.ndarray, y_speedup: np.ndarray, *,
-              hidden=(9, 9, 9), n_components: int = 9, epochs: int = 600,
-              lr: float = 1e-2, seed: int = 0) -> "PerformanceModel":
-        """X_raw rows = program features ++ config encoding; y = speedup."""
-        pipe = FeaturePipeline.fit(X_raw, y_speedup, n_components=n_components)
-        X = pipe.transform(X_raw)
-        y = pipe.transform_y(y_speedup)
-        params = _init_mlp(jax.random.key(seed), X.shape[1], hidden)
-        params, _ = _adam_train(params, X, y, lr=lr, epochs=epochs, seed=seed)
-        return PerformanceModel(pipe, params, tuple(hidden))
-
-    def predict(self, X_raw: np.ndarray) -> np.ndarray:
-        X = self.pipeline.transform(np.atleast_2d(X_raw))
-        yn = np.asarray(_mlp_forward(self.mlp_params, jnp.asarray(X)))
-        return self.pipeline.inverse_y(yn)
-
-    def refit(self, X_raw: np.ndarray, y_speedup: np.ndarray, *,
-              epochs: int = 150, lr: float = 3e-3) -> float:
-        """Incremental online refit: continue adam from the current
-        parameters on freshly *measured* (features ++ config, speedup)
-        rows.  The feature pipeline stays frozen so the input space is
-        stable across refits; only the MLP moves.  This is the serving
-        drift-correction hook — a few hundred cheap steps on a handful of
-        rows, not a retrain.  Returns the final training loss."""
-        X = self.pipeline.transform(np.atleast_2d(np.asarray(X_raw, float)))
-        yn = self.pipeline.transform_y(
-            np.asarray(y_speedup, float).reshape(-1))
-        self.mlp_params, loss = _adam_train(self.mlp_params, X, yn,
-                                            lr=lr, epochs=epochs)
-        return float(loss)
-
-    def fork(self) -> "PerformanceModel":
-        """A refit-isolated copy sharing the frozen feature pipeline.
-
-        ``refit`` rebinds ``mlp_params`` to freshly built trees (adam
-        never mutates arrays in place), so copying the layer containers
-        is enough: the fork and the original diverge from the first
-        refit on either side.  This is the serving tenancy hook — every
-        tenant refits its own fork of the shared read-only base model."""
-        return PerformanceModel(self.pipeline,
-                                [dict(layer) for layer in self.mlp_params],
-                                self.hidden)
-
-    def predict_configs(self, prog_feats: np.ndarray,
-                        configs) -> np.ndarray:
-        """Rank many configs for one or many programs (the runtime search
-        core).  ``prog_feats`` may be a single ``(F,)`` feature vector —
-        returns ``(C,)`` predictions — or a ``(B, F)`` matrix of programs
-        — returns ``(B, C)``, one MLP forward for the whole batch (the
-        serving engine's batched cold path)."""
-        P = np.atleast_2d(np.asarray(prog_feats, dtype=np.float64))
-        rows = assemble_rows(P, configs)
-        preds = self.predict(rows).reshape(P.shape[0], len(configs))
-        return preds[0] if np.ndim(prog_feats) == 1 else preds
-
-
-def assemble_rows(prog_feats: np.ndarray, configs) -> np.ndarray:
-    """Program features ++ config encodings, vectorized: ``(F,)`` input
-    yields ``(C, F+3)`` rows; ``(B, F)`` input yields ``(B*C, F+3)`` rows
-    grouped program-major."""
-    P = np.atleast_2d(np.asarray(prog_feats, dtype=np.float64))
-    C = config_feature_matrix(configs)
-    return np.concatenate([np.repeat(P, len(configs), axis=0),
-                           np.tile(C, (P.shape[0], 1))], axis=1)
-
-
-# ---------------------------------------------------------------------------
-# Alternative learners (Table 5)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class _TreeNode:
-    feature: int = -1
-    thresh: float = 0.0
-    value: float = 0.0
-    left: Optional["_TreeNode"] = None
-    right: Optional["_TreeNode"] = None
-
-
-def _build_tree(X, y, depth, min_leaf=8) -> _TreeNode:
-    node = _TreeNode(value=float(y.mean()))
-    if depth == 0 or len(y) < 2 * min_leaf or y.std() < 1e-9:
-        return node
-    best = (None, None, np.inf)
-    n_feat = X.shape[1]
-    for j in range(n_feat):
-        order = np.argsort(X[:, j])
-        xs, ys = X[order, j], y[order]
-        csum = np.cumsum(ys)
-        csq = np.cumsum(ys ** 2)
-        total, total_sq = csum[-1], csq[-1]
-        for i in range(min_leaf, len(ys) - min_leaf):
-            if xs[i] == xs[i - 1]:
-                continue
-            nl, nr = i, len(ys) - i
-            sl, sr = csum[i - 1], total - csum[i - 1]
-            ql, qr = csq[i - 1], total_sq - csq[i - 1]
-            sse = (ql - sl**2 / nl) + (qr - sr**2 / nr)
-            if sse < best[2]:
-                best = (j, (xs[i] + xs[i - 1]) / 2, sse)
-    if best[0] is None:
-        return node
-    j, t, _ = best
-    mask = X[:, j] <= t
-    node.feature, node.thresh = j, t
-    node.left = _build_tree(X[mask], y[mask], depth - 1, min_leaf)
-    node.right = _build_tree(X[~mask], y[~mask], depth - 1, min_leaf)
-    return node
-
-
-def _tree_predict_one(node: _TreeNode, x) -> float:
-    while node.feature >= 0:
-        node = node.left if x[node.feature] <= node.thresh else node.right
-    return node.value
-
-
-@dataclasses.dataclass
-class TreeRegressor:
-    pipeline: FeaturePipeline
-    root: _TreeNode
-
-    @staticmethod
-    def train(X_raw, y, *, depth=10, n_components=9,
-              max_rows=4000, seed=0) -> "TreeRegressor":
-        pipe = FeaturePipeline.fit(X_raw, y, n_components=n_components)
-        X = pipe.transform(X_raw)
-        yn = pipe.transform_y(y)
-        if len(yn) > max_rows:
-            idx = np.random.default_rng(seed).choice(
-                len(yn), max_rows, replace=False)
-            X, yn = X[idx], yn[idx]
-        root = _build_tree(X, yn, depth)
-        return TreeRegressor(pipe, root)
-
-    def predict(self, X_raw) -> np.ndarray:
-        X = self.pipeline.transform(np.atleast_2d(X_raw))
-        yn = np.array([_tree_predict_one(self.root, x) for x in X])
-        return self.pipeline.inverse_y(yn)
-
-
-@dataclasses.dataclass
-class ForestRegressor:
-    pipeline: FeaturePipeline
-    roots: list
-
-    @staticmethod
-    def train(X_raw, y, *, n_trees=5, depth=8, n_components=9,
-              max_rows=2000, seed=0) -> "ForestRegressor":
-        pipe = FeaturePipeline.fit(X_raw, y, n_components=n_components)
-        X = pipe.transform(X_raw)
-        yn = pipe.transform_y(y)
-        rng = np.random.default_rng(seed)
-        roots = []
-        for _ in range(n_trees):
-            idx = rng.integers(0, len(yn), min(len(yn), max_rows))
-            roots.append(_build_tree(X[idx], yn[idx], depth))
-        return ForestRegressor(pipe, roots)
-
-    def predict(self, X_raw) -> np.ndarray:
-        X = self.pipeline.transform(np.atleast_2d(X_raw))
-        yn = np.mean([[_tree_predict_one(r, x) for x in X]
-                      for r in self.roots], axis=0)
-        return self.pipeline.inverse_y(yn)
-
-
-@dataclasses.dataclass
-class KernelRidgeRBF:
-    """RBF kernel ridge regression — closed-form SVR stand-in (no sklearn
-    offline; documented substitution for the paper's SVM regressor)."""
-
-    pipeline: FeaturePipeline
-    X_train: np.ndarray
-    alpha: np.ndarray
-    gamma: float
-
-    @staticmethod
-    def train(X_raw, y, *, lam=1e-2, gamma=None,
-              n_components=9, max_train=3000, seed=0) -> "KernelRidgeRBF":
-        pipe = FeaturePipeline.fit(X_raw, y, n_components=n_components)
-        X = pipe.transform(X_raw)
-        yn = pipe.transform_y(y)
-        if len(yn) > max_train:
-            rng = np.random.default_rng(seed)
-            idx = rng.choice(len(yn), max_train, replace=False)
-            X, yn = X[idx], yn[idx]
-        gamma = gamma or 1.0 / X.shape[1]
-        K = _rbf(X, X, gamma)
-        alpha = np.linalg.solve(K + lam * np.eye(len(yn)), yn)
-        return KernelRidgeRBF(pipe, X, alpha, gamma)
-
-    def predict(self, X_raw) -> np.ndarray:
-        X = self.pipeline.transform(np.atleast_2d(X_raw))
-        yn = _rbf(X, self.X_train, self.gamma) @ self.alpha
-        return self.pipeline.inverse_y(yn)
-
-
-def _rbf(A, B, gamma):
-    d2 = (np.sum(A**2, 1)[:, None] + np.sum(B**2, 1)[None, :]
-          - 2 * A @ B.T)
-    return np.exp(-gamma * np.maximum(d2, 0.0))
+__all__ = ["FeaturePipeline", "PerformanceModel", "TreeRegressor",
+           "ForestRegressor", "KernelRidgeRBF", "assemble_rows"]

@@ -120,6 +120,46 @@ def serve(
 DEFAULT_ADAPTIVE_WORKLOADS = ("vecadd", "dotprod", "mvmult")
 
 
+def resolve_serving_model(spec: str = "latest", model_dir=None, *,
+                          bootstrap: bool = True, verbose: bool = True):
+    """Resolve ``--model`` to ``(model, info)``.
+
+    ``spec`` is ``"latest"``, an artifact id, an artifact directory
+    path, or ``"heuristic"`` — the explicit opt-in for the zero-training
+    stand-in.  The default path serves from a registry-loaded trained
+    artifact; when ``latest`` resolves to an empty registry, a minimal
+    artifact is bootstrap-trained and published first (one-off; the
+    profile cache makes repeats cheap).  ``info["artifact_id"]`` doubles
+    as the scheduler's ``model_tag`` so tuning-cache entries are keyed
+    by model version and a hot-swapped model never serves stale picks.
+    """
+    from repro.core.modeling import OverlapHeuristicModel
+    from repro.core.modeling.registry import ModelRegistry
+
+    if spec == "heuristic":
+        return OverlapHeuristicModel(), {
+            "spec": spec, "kind": "heuristic", "artifact_id": "heuristic"}
+    registry = ModelRegistry(model_dir)
+    try:
+        model, manifest = registry.load(spec)
+    except FileNotFoundError:
+        if spec != "latest" or not bootstrap:
+            raise
+        from repro.launch.train_model import bootstrap_artifact
+        artifact_id = bootstrap_artifact(registry, verbose=verbose)
+        model, manifest = registry.load(artifact_id)
+    info = {"spec": spec, "kind": manifest["kind"],
+            "artifact_id": manifest["artifact_id"],
+            "corpus_fingerprint": manifest.get("corpus_fingerprint"),
+            "cv_frac_of_oracle": (manifest.get("cv") or {}).get(
+                "frac_of_oracle")}
+    if verbose:
+        print(f"serving model: {info['artifact_id']} "
+              f"(kind={info['kind']}, registry={registry.root})",
+              file=sys.stderr, flush=True)
+    return model, info
+
+
 def adaptive_serve(
     workloads: Sequence[str] = DEFAULT_ADAPTIVE_WORKLOADS,
     *,
@@ -132,6 +172,8 @@ def adaptive_serve(
     window: int = 1,
     workers: Optional[int] = None,
     tenants: int = 0,
+    model: str = "latest",
+    model_dir=None,
     seed: int = 0,
     verbose: bool = True,
 ) -> dict:
@@ -144,16 +186,21 @@ def adaptive_serve(
     ``tenants > 0`` names that many tenants AND isolates them: each gets
     its own tuning-cache namespace, drift windows, and (on first refit)
     a private model fork; ``tenants=0`` keeps the legacy two-tenant
-    shared-state trace.  Returns the telemetry summary dict (requests,
-    hit rate, refinements, per-tenant breakdown, mean prediction
-    error); the per-request JSONL stream lands at ``telemetry_path``
-    when given, and new tuning-cache entries persist to ``cache_path``.
+    shared-state trace.  ``model`` selects the predictor: the default
+    ``"latest"`` serves from the registry's pinned trained artifact
+    (bootstrap-training one if the registry is empty); ``"heuristic"``
+    opts into the zero-training stand-in.  Returns the telemetry summary
+    dict (requests, hit rate, refinements, per-tenant breakdown, mean
+    prediction error); the per-request JSONL stream lands at
+    ``telemetry_path`` when given, and new tuning-cache entries persist
+    to ``cache_path``.
     """
     from repro.core.autotuner import TuningCache
     from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
-                               DriftDetector, OverlapHeuristicModel,
-                               TelemetryLog, make_trace)
+                               DriftDetector, TelemetryLog, make_trace)
 
+    serving_model, model_info = resolve_serving_model(
+        model, model_dir, verbose=verbose)
     occurrences = -(-n_requests // len(workloads))  # ceil
     trace = make_trace(list(workloads), occurrences=occurrences,
                        tenants=tenants if tenants > 0
@@ -165,13 +212,14 @@ def adaptive_serve(
         telemetry=TelemetryLog(telemetry_path),
         drift=DriftDetector(threshold=drift_threshold),
         isolate_tenants=tenants > 0,
+        model_tag=model_info["artifact_id"],
         keep_outputs=False)
     if window > 1:
-        sched = ConcurrentScheduler(OverlapHeuristicModel(),
+        sched = ConcurrentScheduler(serving_model,
                                     window=window, workers=workers,
                                     **common)
     else:
-        sched = AdaptiveScheduler(OverlapHeuristicModel(), **common)
+        sched = AdaptiveScheduler(serving_model, **common)
     # context-managed: telemetry is flushed/fsynced/closed even if the
     # trace dies mid-flight, so artifact uploads never see a truncated
     # last line
@@ -195,6 +243,7 @@ def adaptive_serve(
         summary["wall_s"] = wall
         summary["backend"] = backend
         summary["policy"] = policy
+        summary["model"] = model_info
         summary["window"] = window
         summary["isolate_tenants"] = tenants > 0
         summary["throughput_rps"] = n_requests / max(wall, 1e-12)
@@ -233,6 +282,13 @@ def main() -> None:
                     help="serve N isolated tenants (per-tenant cache "
                          "namespace, drift windows, model fork on "
                          "refit); 0 = legacy shared-state trace")
+    ap.add_argument("--model", default="latest",
+                    help="'latest' (registry-pinned trained artifact, "
+                         "the default), an artifact id/path, or "
+                         "'heuristic' for the zero-training fallback")
+    ap.add_argument("--model-dir", default=None,
+                    help="model registry root (default: REPRO_MODEL_DIR "
+                         "or <repo>/models)")
     args = ap.parse_args()
 
     if args.adaptive:
@@ -241,7 +297,8 @@ def main() -> None:
             n_requests=args.requests, backend=args.backend,
             policy=args.policy, telemetry_path=args.telemetry,
             cache_path=args.tuning_cache, window=args.window,
-            workers=args.workers, tenants=args.tenants)
+            workers=args.workers, tenants=args.tenants,
+            model=args.model, model_dir=args.model_dir)
         print(json.dumps(summary, indent=2))
         return
 

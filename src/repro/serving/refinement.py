@@ -30,8 +30,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.autotuner import TuneResult, TuningCache
-from repro.core.perf_model import assemble_rows
-from repro.core.search import search_best
+from repro.core.modeling.base import assemble_rows
+from repro.core.modeling.search import search_best
 from repro.core.stream_config import SINGLE_STREAM, StreamConfig, \
     default_space
 from repro.core.streams import StreamedRunner, profile_grid_interleaved

@@ -32,7 +32,9 @@ import numpy as np
 from repro.core import features as feat_lib
 from repro.core.autotuner import TuneResult, TuningCache
 from repro.core.features import RAW_FEATURE_NAMES
-from repro.core.search import search_best, search_best_batch
+# re-exported for back-compat: the heuristic used to be defined here
+from repro.core.modeling.heuristic import OverlapHeuristicModel  # noqa: F401
+from repro.core.modeling.search import search_best, search_best_batch
 from repro.core.stream_config import SINGLE_STREAM, StreamConfig, \
     default_space
 from repro.core.streams import StreamedRunner, readback_outputs
@@ -44,40 +46,6 @@ from repro.serving.telemetry import TelemetryLog, TelemetrySample, \
 from repro.serving.tenancy import TenantContext, TenantRegistry
 
 _I_T_SINGLE = RAW_FEATURE_NAMES.index("t_single_us")
-_I_T_XFER = RAW_FEATURE_NAMES.index("t_transfer_us")
-_I_T_COMP = RAW_FEATURE_NAMES.index("t_compute_us")
-
-
-class OverlapHeuristicModel:
-    """Zero-training stand-in for a trained :class:`PerformanceModel`.
-
-    Scores each candidate with the classic streams overlap bound: with
-    ``n`` tasks the makespan is the dominant phase plus ``1/n`` of the
-    overlapped phase plus a per-dispatch overhead that grows with
-    partitions × tasks.  Deterministic given the extracted features, so
-    the serving smoke paths (CLI, CI trace) need no training set.
-
-    Fully vectorized: the candidate grid is scored as numpy arrays (the
-    ``(partitions, tasks)`` columns are memoized per grid), and a
-    ``(B, F)`` feature matrix scores ``B`` programs in one call — the
-    same batched contract as :meth:`PerformanceModel.predict_configs`.
-    """
-
-    def __init__(self, overhead_s: float = 30e-6):
-        self.overhead_s = overhead_s
-
-    def predict_configs(self, prog_feats: np.ndarray,
-                        configs) -> np.ndarray:
-        P = np.atleast_2d(np.asarray(prog_feats, dtype=np.float64))
-        t_comp = P[:, _I_T_COMP, None] * 1e-6          # (B, 1)
-        t_xfer = P[:, _I_T_XFER, None] * 1e-6
-        base = np.maximum(t_comp + t_xfer, 1e-9)
-        parts, tasks = feat_lib.config_pt_arrays(configs)   # (C,), (C,)
-        makespan = (np.maximum(t_comp, t_xfer)
-                    + np.minimum(t_comp, t_xfer) / tasks
-                    + self.overhead_s * parts * tasks)
-        preds = base / makespan                         # (B, C)
-        return preds[0] if np.ndim(prog_feats) == 1 else preds
 
 
 @dataclasses.dataclass
@@ -467,6 +435,25 @@ class AdaptiveScheduler:
         if t_single is None or entry.predicted_speedup <= 0:
             return None
         return t_single / entry.predicted_speedup
+
+    # -- model lifecycle ------------------------------------------------------
+
+    def swap_model(self, model, model_tag: Optional[str] = None) -> None:
+        """Hot-swap the serving base model (a registry ``refresh`` handed
+        us a newly published artifact).  Future cold searches, batched
+        searches, and refinements rank with the new model; tenants that
+        already forked keep their fork (their measured corrections are
+        newer than any offline retrain) until their next explicit reset.
+
+        ``model_tag`` should name the new artifact id: tuning-cache keys
+        embed it, so every bucket decided under the old model becomes a
+        cold miss and is re-ranked by the new one instead of serving
+        stale picks."""
+        self.model = model
+        self.refiner.model = model
+        self.tenancy.hot_swap(model)
+        if model_tag is not None:
+            self.model_tag = model_tag
 
     # -- teardown -------------------------------------------------------------
 

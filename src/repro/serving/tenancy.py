@@ -113,6 +113,24 @@ class TenantRegistry:
         self._shared = TenantContext("*", base_model, shared_drift,
                                      isolated=False)
         self._contexts: dict[str, TenantContext] = {}
+        #: artifact id the base model was loaded from; None when the
+        #: caller handed us a model object directly
+        self.base_artifact_id: Optional[str] = None
+
+    @classmethod
+    def from_model_registry(cls, registry, shared_drift: DriftDetector, *,
+                            spec: str = "latest", isolate: bool = False
+                            ) -> "TenantRegistry":
+        """Draw the shared read-only base model from a
+        :class:`~repro.core.modeling.registry.ModelRegistry` artifact —
+        per-tenant copy-on-refit forks then descend from a real trained
+        model, not a heuristic stand-in.  The loaded artifact id lands on
+        ``.base_artifact_id`` so the caller can key caches / hot-swap
+        polls off it."""
+        model, manifest = registry.load(spec)
+        reg = cls(model, shared_drift, isolate=isolate)
+        reg.base_artifact_id = manifest.get("artifact_id")
+        return reg
 
     def get(self, tenant: str) -> TenantContext:
         if not self.isolate:
@@ -126,6 +144,38 @@ class TenantRegistry:
 
     def namespace(self, tenant: str) -> str:
         return tenant if self.isolate else ""
+
+    # -- model lifecycle ------------------------------------------------------
+
+    def hot_swap(self, base_model) -> int:
+        """Swap the shared read-only base model (a newly published
+        registry artifact).  Every context still serving from the base —
+        including the shared non-isolated one — follows immediately;
+        tenants that already forked keep their fork, whose measured
+        online corrections are newer than any offline retrain.  Returns
+        how many contexts now serve the new base."""
+        self.base_model = base_model
+        swapped = 0
+        for ctx in [self._shared, *self._contexts.values()]:
+            ctx.base_model = base_model
+            if ctx.model is None:
+                swapped += 1
+        return swapped
+
+    def persist_forks(self, model_registry, **meta) -> dict[str, str]:
+        """Publish every tenant's refined fork back into a
+        :class:`~repro.core.modeling.registry.ModelRegistry` as a
+        tenant-tagged artifact (never auto-pinned as ``latest``).
+        Returns tenant name -> published artifact id.  A fork with no
+        artifact serialization support is skipped — there is nothing
+        durable to persist."""
+        published: dict[str, str] = {}
+        for ctx in self._contexts.values():
+            if ctx.model is None or not hasattr(ctx.model, "to_state"):
+                continue
+            published[ctx.name] = model_registry.publish(
+                ctx.model, tenant=ctx.name, **meta)
+        return published
 
     @property
     def contexts(self) -> dict[str, TenantContext]:

@@ -26,7 +26,9 @@ def fast_profile_defaults():
     if os.environ.get("REPRO_FULL_PROFILE"):
         yield
         return
-    from repro.core import dataset
+    # patch the real module, not the repro.core.dataset shim: the call
+    # sites (profile_sample) resolve grid_for in the modeling namespace
+    from repro.core.modeling import dataset
 
     orig_grid_for = dataset.grid_for
 

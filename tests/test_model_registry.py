@@ -1,0 +1,180 @@
+"""ModelRegistry lifecycle: version allocation, ``latest`` pinning,
+hot-swap refresh, tenant-tagged fork persistence, serving's model
+resolution, and the scheduler's ``swap_model`` hook."""
+import numpy as np
+import pytest
+
+from repro.core.features import RAW_FEATURE_NAMES, config_features
+from repro.core.modeling import (ModelRegistry, OverlapHeuristicModel,
+                                 PerformanceModel)
+from repro.core.stream_config import SINGLE_STREAM, default_space
+from repro.launch.serve import resolve_serving_model
+from repro.serving import AdaptiveScheduler, DriftDetector, TenantRegistry
+
+N_FEAT = len(RAW_FEATURE_NAMES)
+
+
+def _tiny_model(seed=0, epochs=25) -> PerformanceModel:
+    rng = np.random.default_rng(seed)
+    n = 60
+    X = np.concatenate(
+        [rng.uniform(0.5, 2.0, size=(n, N_FEAT)),
+         np.stack([config_features(2 ** (i % 3), 2 ** (i % 5))
+                   for i in range(n)])], axis=1)
+    y = rng.uniform(0.5, 3.0, size=n)
+    return PerformanceModel.train(X, y, epochs=epochs)
+
+
+@pytest.fixture(scope="module")
+def base_model():
+    return _tiny_model()
+
+
+def test_publish_allocates_versions_and_pins_latest(base_model, tmp_path):
+    reg = ModelRegistry(tmp_path)
+    assert reg.list() == [] and reg.latest_id() is None
+    a1 = reg.publish(base_model)
+    a2 = reg.publish(base_model)
+    assert [a1, a2] == ["mlp-v001", "mlp-v002"]
+    assert reg.latest_id() == a2
+    model, manifest = reg.load("latest")
+    assert manifest["artifact_id"] == a2
+    assert isinstance(model, PerformanceModel)
+    # explicit id and filesystem path both resolve
+    assert reg.load(a1)[1]["artifact_id"] == a1
+    assert reg.load(str(tmp_path / a1))[1]["artifact_id"] == a1
+
+
+def test_tenant_publish_never_auto_pins(base_model, tmp_path):
+    reg = ModelRegistry(tmp_path)
+    fleet = reg.publish(base_model)
+    fork_id = reg.publish(base_model.fork(), tenant="tenant-a")
+    assert fork_id == "mlp-tenant-a-v001"
+    assert reg.latest_id() == fleet
+    assert reg.manifest(fork_id)["tenant"] == "tenant-a"
+    # tenant lineage versions independently of the fleet lineage
+    assert reg.publish(base_model.fork(),
+                       tenant="tenant-a") == "mlp-tenant-a-v002"
+
+
+def test_refresh_hot_swaps_only_on_pointer_move(base_model, tmp_path):
+    reg = ModelRegistry(tmp_path)
+    a1 = reg.publish(base_model)
+    model, manifest = reg.load("latest")
+    assert reg.refresh(manifest["artifact_id"]) is None   # unchanged
+    a2 = reg.publish(_tiny_model(seed=1))
+    swapped = reg.refresh(manifest["artifact_id"])
+    assert swapped is not None
+    new_model, new_manifest = swapped
+    assert new_manifest["artifact_id"] == a2 != a1
+    assert reg.refresh(a2) is None
+
+
+def test_load_missing_artifact_raises(tmp_path):
+    reg = ModelRegistry(tmp_path)
+    with pytest.raises(FileNotFoundError, match="no 'latest'"):
+        reg.load("latest")
+    with pytest.raises(FileNotFoundError, match="no artifact"):
+        reg.load("mlp-v999")
+
+
+def test_dangling_latest_pointer_is_corruption_not_empty(base_model,
+                                                         tmp_path):
+    """latest -> a deleted artifact must raise RuntimeError, NOT
+    FileNotFoundError: serving's empty-registry bootstrap would
+    otherwise silently train a fresh model over the corruption."""
+    import shutil
+
+    reg = ModelRegistry(tmp_path)
+    aid = reg.publish(base_model)
+    shutil.rmtree(tmp_path / aid)
+    with pytest.raises(RuntimeError, match="points at"):
+        reg.load("latest")
+    with pytest.raises(RuntimeError, match="points at"):
+        resolve_serving_model("latest", tmp_path, verbose=False)
+
+
+def test_tenant_registry_draws_base_from_model_registry(base_model,
+                                                        tmp_path):
+    reg = ModelRegistry(tmp_path)
+    aid = reg.publish(base_model)
+    tenants = TenantRegistry.from_model_registry(
+        reg, DriftDetector(), isolate=True)
+    assert tenants.base_artifact_id == aid
+    ctx = tenants.get("tenant-a")
+    feats = np.full(N_FEAT, 1.2)
+    preds = ctx.active_model.predict_configs(feats, [SINGLE_STREAM])
+    assert np.isfinite(preds).all()
+
+
+def test_persist_forks_publishes_tenant_tagged_artifacts(base_model,
+                                                         tmp_path):
+    reg = ModelRegistry(tmp_path)
+    reg.publish(base_model)
+    tenants = TenantRegistry.from_model_registry(
+        reg, DriftDetector(), isolate=True)
+    # tenant-a refits (forks); tenant-b never does
+    ctx = tenants.get("tenant-a")
+    fork = ctx.fork_for_refit()
+    assert ctx.forked and fork is not tenants.base_model
+    tenants.get("tenant-b")
+    published = tenants.persist_forks(reg, tag="drift-corrected")
+    assert list(published) == ["tenant-a"]
+    fork_id = published["tenant-a"]
+    loaded, manifest = reg.load(fork_id)
+    assert manifest["tenant"] == "tenant-a"
+    assert manifest["tag"] == "drift-corrected"
+    assert reg.latest_id() != fork_id
+    feats = np.full(N_FEAT, 0.8)
+    cands = list(default_space(4, 8))
+    np.testing.assert_array_equal(fork.predict_configs(feats, cands),
+                                  loaded.predict_configs(feats, cands))
+
+
+def test_hot_swap_updates_unforked_contexts_only(base_model):
+    old, new = base_model, _tiny_model(seed=2)
+    tenants = TenantRegistry(old, DriftDetector(), isolate=True)
+    forked_ctx = tenants.get("tenant-a")
+    fork = forked_ctx.fork_for_refit()
+    fresh_ctx = tenants.get("tenant-b")
+    tenants.hot_swap(new)
+    assert tenants.base_model is new
+    assert fresh_ctx.active_model is new
+    assert forked_ctx.active_model is fork     # fork survives the swap
+    assert tenants.get("tenant-c").active_model is new
+
+
+def test_scheduler_swap_model_rotates_model_and_tag(base_model):
+    new = _tiny_model(seed=3)
+    sched = AdaptiveScheduler(base_model, model_tag="mlp-v001")
+    try:
+        sched.swap_model(new, model_tag="mlp-v002")
+        assert sched.model is new
+        assert sched.refiner.model is new
+        assert sched.tenancy.base_model is new
+        assert sched.model_tag == "mlp-v002"
+        # the non-isolated shared context serves the new base too
+        assert sched.tenancy.get("anyone").active_model is new
+    finally:
+        sched.close()
+
+
+def test_resolve_serving_model_heuristic_and_artifact(base_model,
+                                                      tmp_path):
+    model, info = resolve_serving_model("heuristic", tmp_path,
+                                        verbose=False)
+    assert isinstance(model, OverlapHeuristicModel)
+    assert info["artifact_id"] == "heuristic"
+
+    reg = ModelRegistry(tmp_path)
+    aid = reg.publish(base_model, cv={"frac_of_oracle": 0.88})
+    model, info = resolve_serving_model("latest", tmp_path, verbose=False)
+    assert isinstance(model, PerformanceModel)
+    assert info["artifact_id"] == aid
+    assert info["cv_frac_of_oracle"] == 0.88
+
+    # the default path refuses silently falling back to the heuristic:
+    # an empty registry without bootstrap is an error, not a stand-in
+    with pytest.raises(FileNotFoundError):
+        resolve_serving_model("latest", tmp_path / "empty",
+                              bootstrap=False, verbose=False)
