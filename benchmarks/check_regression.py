@@ -3,7 +3,7 @@ JSON against the committed baseline and fail CI on a real regression.
 
     python benchmarks/check_regression.py FRESH BASELINE [--tolerance 0.25]
 
-Works on all three benchmark artifacts:
+Works on all four benchmark artifacts:
 
   BENCH_serving.json  (``--serve-concurrent``)  gated on
       ``capacity_fraction`` — the engine's speedup normalized by the SAME
@@ -19,14 +19,26 @@ Works on all three benchmark artifacts:
       trained model) and ``model_vs_heuristic`` (trained model vs the
       zero-training stand-in on the same corpus) — both ratios of
       measurements from one profiled grid, so host drift cancels.
+  BENCH_latency.json  (``--serve-trace``)       gated on
+      tail-latency / SLO metrics from the virtual-time trace replay:
+      ``deadline_slo_violation_rate``, ``fifo_slo_violation_rate`` and
+      ``deadline_p95_latency_ms`` (lower is better),
+      ``stationary_refinements`` (a baseline of 0 makes this an
+      exact-zero gate: contention must never masquerade as drift on a
+      stationary trace), and ``deadline_vs_fifo_violation_improvement``
+      (higher is better — EDF + shedding must keep beating FIFO).
+      These numbers are deterministic given the seed (no wall clock in
+      the loop), so even a tight tolerance is noise-free.
 
-A metric regresses when ``fresh < baseline * (1 - tolerance)``.  The
-default 25% tolerance is deliberately loose for the same reason the
-metrics are ratios: this gate exists to catch code-level regressions
-(a scheduling bug halving overlap, a refinement loop converging to junk
-configs), not to re-measure the neighbors.  Improvements are reported
-but never fail.  Missing metrics fail loudly — a silently skipped gate
-is worse than a red one.
+A higher-is-better metric regresses when
+``fresh < baseline * (1 - tolerance)``; a lower-is-better one when
+``fresh > baseline * (1 + tolerance)``.  The default 25% tolerance is
+deliberately loose for the same reason the wall-clock metrics are
+ratios: this gate exists to catch code-level regressions (a scheduling
+bug halving overlap, a refinement loop converging to junk configs), not
+to re-measure the neighbors.  Improvements are reported but never fail.
+Missing metrics fail loudly — a silently skipped gate is worse than a
+red one.
 """
 from __future__ import annotations
 
@@ -34,15 +46,31 @@ import argparse
 import json
 import sys
 
-# metric name -> higher is better (all current metrics are ratios where
-# bigger means healthier; extend here if a lower-is-better metric lands)
+# metric name -> (direction, description); direction is "higher" when
+# bigger means healthier, "lower" for latency/violation-style metrics
 GATED_METRICS = {
-    "capacity_fraction": "engine speedup / host parallel-capacity ceiling",
-    "mean_regret": "steady-state achieved/oracle runtime ratio",
-    "model_frac_of_oracle": "LOO-CV achieved/oracle speedup of the "
-                            "trained model",
-    "model_vs_heuristic": "trained-model / heuristic achieved speedup "
-                          "on the same corpus",
+    "capacity_fraction":
+        ("higher", "engine speedup / host parallel-capacity ceiling"),
+    "mean_regret":
+        ("higher", "steady-state achieved/oracle runtime ratio"),
+    "model_frac_of_oracle":
+        ("higher", "LOO-CV achieved/oracle speedup of the trained model"),
+    "model_vs_heuristic":
+        ("higher", "trained-model / heuristic achieved speedup on the "
+                   "same corpus"),
+    "deadline_slo_violation_rate":
+        ("lower", "SLO misses (retired late + shed) / deadline-carrying "
+                  "requests, deadline policy, bursty trace"),
+    "fifo_slo_violation_rate":
+        ("lower", "same, fifo policy — the no-admission-control bound"),
+    "deadline_p95_latency_ms":
+        ("lower", "p95 end-to-end latency, deadline policy, virtual ms"),
+    "stationary_refinements":
+        ("lower", "drift refinements on a stationary trace (baseline 0 "
+                  "== exact-zero gate)"),
+    "deadline_vs_fifo_violation_improvement":
+        ("higher", "fifo / deadline SLO-violation rate on the same "
+                   "trace"),
 }
 
 # context printed next to the verdict but never gated (absolute numbers
@@ -58,6 +86,7 @@ def gate(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
                 f"{sorted(GATED_METRICS)} — wrong file?"]
     failures = []
     for metric in shared:
+        direction, desc = GATED_METRICS[metric]
         base = float(baseline[metric])
         if fresh.get(metric) is None:     # absent OR null (e.g. a trace
             # too short to serve every tenant leaves regret undefined)
@@ -65,14 +94,22 @@ def gate(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
                             f"(baseline {base:.3f})")
             continue
         got = float(fresh[metric])
-        floor = base * (1.0 - tolerance)
-        verdict = "OK" if got >= floor else "REGRESSION"
-        print(f"  {metric:20s} fresh={got:7.3f}  baseline={base:7.3f}  "
-              f"floor={floor:7.3f}  {verdict}   ({GATED_METRICS[metric]})")
-        if got < floor:
+        if direction == "higher":
+            bound = base * (1.0 - tolerance)
+            bad = got < bound
+            kind, rel = "floor", "<"
+        else:
+            bound = base * (1.0 + tolerance)
+            bad = got > bound
+            kind, rel = "ceil", ">"
+        verdict = "REGRESSION" if bad else "OK"
+        print(f"  {metric:38s} fresh={got:9.4f}  baseline={base:9.4f}  "
+              f"{kind}={bound:9.4f}  {verdict}   ({desc})")
+        if bad:
             failures.append(
-                f"{metric}: {got:.3f} < {floor:.3f} "
-                f"(baseline {base:.3f} - {tolerance:.0%})")
+                f"{metric}: {got:.4f} {rel} {bound:.4f} "
+                f"(baseline {base:.4f} {'-' if direction == 'higher' else '+'}"
+                f" {tolerance:.0%})")
     for metric in INFO_METRICS:
         if metric in fresh and metric in baseline:
             print(f"  {metric:20s} fresh={float(fresh[metric]):7.3f}  "

@@ -11,6 +11,9 @@ run also profiles the 39-program suite).
     PYTHONPATH=src python -m benchmarks.run --serve-oracle --tenants 3
                                 # steady-state regret vs the per-workload
                                 # oracle -> BENCH_oracle.json
+    PYTHONPATH=src python -m benchmarks.run --serve-trace
+                                # virtual-time tail-latency trace replay
+                                # (10^5 requests) -> BENCH_latency.json
 
 A dry-run roofline summary (from benchmarks/data/dryrun/*.json, produced
 by benchmarks/dryrun_sweep.py) is appended when available.
@@ -516,6 +519,84 @@ def serve_oracle_trace(programs=None, *, tenants: int = 3, rounds: int = 12,
     return rows
 
 
+TRACE_POLICIES = ("fifo", "priority", "fair", "deadline")
+
+
+def serve_latency_trace(*, n_requests: int = 100_000, seed: int = 0,
+                        window: int = 8, capacity: float = 1.6,
+                        json_path: str = "BENCH_latency.json") -> list[str]:
+    """Tail-latency trace replay: every queue policy on the SAME seeded
+    bursty million-scale trace, in virtual time.
+
+    Uses :mod:`repro.serving.traces`: a deterministic MMPP/Zipf trace
+    over the registered workload suite is replayed through the real
+    request queue + drift detector on a virtual clock, so a 10^5-request
+    run takes seconds and the p50/p95/p99 latencies, SLO-violation
+    rates, shed counts, and queue-depth stats are exactly reproducible
+    — the regression gate can hold them to tight tolerances because no
+    wall-clock noise enters the numbers.
+
+    Two extra runs pin the drift detector's long-trace behaviour:
+      * a stationary Poisson trace at the same window must produce ZERO
+        refinements (contention at window=8 must not masquerade as
+        drift — the load-aware signal's acceptance bar);
+      * the bursty ``deadline`` run must beat ``fifo`` on SLO-violation
+        rate (EDF boost + shedding earning their keep).
+    """
+    from repro.serving.traces import (TraceConfig, generate_trace,
+                                      simulate_trace)
+
+    rows = []
+    reports = {}
+    bursty = TraceConfig(n_requests=n_requests, seed=seed, arrival="bursty")
+    for policy in TRACE_POLICIES:
+        r = simulate_trace(generate_trace(bursty), policy=policy,
+                           window=window, capacity=capacity, seed=seed)
+        reports[policy] = r
+        lat, slo, qd = r["latency"], r["slo"], r["queue_depth"]
+        rows.append(
+            f"serve_trace.bursty.{policy},{lat['p95_s']*1e6:.0f},"
+            f"p50_ms={lat['p50_s']*1e3:.2f},p99_ms={lat['p99_s']*1e3:.2f},"
+            f"viol_rate={slo['violation_rate']:.4f},shed={slo['shed']},"
+            f"depth_p95={qd['p95']},refinements={r['refinements']}")
+
+    stationary = simulate_trace(
+        generate_trace(TraceConfig(n_requests=n_requests, seed=seed + 1,
+                                   arrival="poisson")),
+        policy="fifo", window=window, capacity=capacity, seed=seed + 1)
+    rows.append(
+        f"serve_trace.stationary.fifo,"
+        f"{stationary['latency']['p95_s']*1e6:.0f},"
+        f"refinements={stationary['refinements']},"
+        f"viol_rate={stationary['slo']['violation_rate']:.4f}")
+
+    fifo_rate = reports["fifo"]["slo"]["violation_rate"]
+    dl_rate = reports["deadline"]["slo"]["violation_rate"]
+    payload = {
+        "n_requests": n_requests,
+        "seed": seed,
+        "window": window,
+        "capacity": capacity,
+        "arrival": "bursty",
+        "policies": reports,
+        "stationary": stationary,
+        # gated, lower is better (deterministic virtual-time numbers)
+        "deadline_slo_violation_rate": dl_rate,
+        "fifo_slo_violation_rate": fifo_rate,
+        "deadline_p95_latency_ms":
+            reports["deadline"]["latency"]["p95_s"] * 1e3,
+        "stationary_refinements": stationary["refinements"],
+        # gated, higher is better: how much EDF+shedding beats FIFO
+        "deadline_vs_fifo_violation_improvement":
+            fifo_rate / max(dl_rate, 1e-9),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(json_path)), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    rows.append(f"# latency-trace JSON written to {json_path}")
+    return rows
+
+
 def model_eval(programs=None, *, datasets: int = 2, reps: int = 1,
                epochs: int = 600,
                json_path: str = "BENCH_model.json") -> list[str]:
@@ -628,6 +709,12 @@ def main() -> None:
     ap.add_argument("--serve-workers", type=int, default=None)
     ap.add_argument("--serve-scale", type=int, default=8,
                     help="dataset scale index for the concurrent trace")
+    ap.add_argument("--serve-trace", action="store_true",
+                    help="virtual-time tail-latency trace replay over "
+                         "every queue policy; writes BENCH_latency.json")
+    ap.add_argument("--trace-requests", type=int, default=100_000,
+                    help="requests per generated trace for --serve-trace")
+    ap.add_argument("--trace-seed", type=int, default=0)
     ap.add_argument("--serve-oracle", action="store_true",
                     help="long-trace oracle-regret benchmark (adaptive "
                          "steady state vs exhaustive per-workload "
@@ -656,6 +743,15 @@ def main() -> None:
                 datasets=args.eval_datasets, reps=args.reps,
                 epochs=args.eval_epochs,
                 json_path=args.serve_json or "BENCH_model.json"):
+            print(row)
+        return
+
+    if args.serve_trace:
+        print("name,us_per_call,derived")
+        for row in serve_latency_trace(
+                n_requests=args.trace_requests, seed=args.trace_seed,
+                window=args.serve_window,
+                json_path=args.serve_json or "BENCH_latency.json"):
             print(row)
         return
 

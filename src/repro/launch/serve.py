@@ -166,6 +166,7 @@ def adaptive_serve(
     n_requests: int = 10,
     backend: str = "host-sync",
     policy: str = "fifo",
+    slo_ms: Optional[float] = None,
     telemetry_path: Optional[str] = None,
     cache_path: Optional[str] = None,
     drift_threshold: float = 4.0,
@@ -183,7 +184,12 @@ def adaptive_serve(
     requests in flight; its drift signal is load-aware (measured wall
     time is normalized by window occupancy over host capacity before
     error computation), so thresholds need no loosening for contention.
-    ``tenants > 0`` names that many tenants AND isolates them: each gets
+    ``slo_ms`` stamps every request with a deadline that many
+    milliseconds after its arrival; under ``policy="deadline"`` the
+    queue serves earliest-deadline-first and sheds already-expired work
+    (reported as ``shed`` in the summary) instead of burning capacity
+    on guaranteed misses.  ``tenants > 0`` names that many tenants AND
+    isolates them: each gets
     its own tuning-cache namespace, drift windows, and (on first refit)
     a private model fork; ``tenants=0`` keeps the legacy two-tenant
     shared-state trace.  ``model`` selects the predictor: the default
@@ -225,6 +231,11 @@ def adaptive_serve(
     # last line
     with sched:
         sched.submit_all(trace)
+        if slo_ms is not None:
+            # arrival_s was stamped at submit; deadlines are absolute on
+            # the scheduler's clock
+            for req in trace:
+                req.deadline_s = req.arrival_s + slo_ms / 1e3
         t0 = time.perf_counter()
         results = sched.run()
         wall = time.perf_counter() - t0
@@ -247,6 +258,8 @@ def adaptive_serve(
         summary["window"] = window
         summary["isolate_tenants"] = tenants > 0
         summary["throughput_rps"] = n_requests / max(wall, 1e-12)
+        summary["slo_ms"] = slo_ms
+        summary["shed"] = len(sched.queue.shed)
         if cache_path:
             sched.cache.save()
     return summary
@@ -268,7 +281,10 @@ def main() -> None:
         DEFAULT_ADAPTIVE_WORKLOADS))
     ap.add_argument("--backend", default="host-sync")
     ap.add_argument("--policy", default="fifo",
-                    choices=("fifo", "priority", "fair"))
+                    choices=("fifo", "priority", "fair", "deadline"))
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="per-request SLO: deadline = arrival + this "
+                         "many ms (deadline policy sheds expired work)")
     ap.add_argument("--telemetry", default=None,
                     help="append-only JSONL telemetry path")
     ap.add_argument("--tuning-cache", default=None,
@@ -295,7 +311,8 @@ def main() -> None:
         summary = adaptive_serve(
             args.workloads.split(","),
             n_requests=args.requests, backend=args.backend,
-            policy=args.policy, telemetry_path=args.telemetry,
+            policy=args.policy, slo_ms=args.slo_ms,
+            telemetry_path=args.telemetry,
             cache_path=args.tuning_cache, window=args.window,
             workers=args.workers, tenants=args.tenants,
             model=args.model, model_dir=args.model_dir)

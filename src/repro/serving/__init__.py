@@ -19,6 +19,7 @@ calibrated parallel capacity).  ``isolate_tenants=True`` gives every
 tenant its own cache namespace, drift windows, and — on first refit — a
 private fork of the shared base model (``tenancy.py``).
 """
+from repro.serving.clock import SystemClock, VirtualClock
 from repro.serving.engine import (ConcurrentScheduler, ContextPool,
                                   OrderedRetirer)
 from repro.serving.queue import POLICIES, RequestQueue, WorkloadRequest
@@ -28,11 +29,17 @@ from repro.serving.scheduler import (AdaptiveScheduler,
                                      OverlapHeuristicModel, PendingRequest,
                                      RequestResult, make_trace)
 from repro.serving.telemetry import (TelemetryLog, TelemetrySample,
+                                     latency_stats, percentile,
                                      relative_error)
 from repro.serving.tenancy import TenantContext, TenantRegistry
+from repro.serving.traces import (ServiceModel, TraceConfig,
+                                  generate_trace, simulate_trace)
 
 __all__ = [
     "POLICIES", "RequestQueue", "WorkloadRequest",
+    "SystemClock", "VirtualClock",
+    "ServiceModel", "TraceConfig", "generate_trace", "simulate_trace",
+    "latency_stats", "percentile",
     "DriftDetector", "RefinementResult", "Refiner", "contention_factor",
     "AdaptiveScheduler", "OverlapHeuristicModel", "PendingRequest",
     "RequestResult", "make_trace",

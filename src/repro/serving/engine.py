@@ -58,7 +58,7 @@ from repro.core.backends.host_threads import WindowedPool
 from repro.core.streams import StreamedRunner, probe_host_capacity
 from repro.core.workloads import get_workload
 from repro.serving.queue import WorkloadRequest
-from repro.serving.refinement import contention_factor
+from repro.serving.refinement import DriftDetector, contention_factor
 from repro.serving.scheduler import (AdaptiveScheduler, PendingRequest,
                                      RequestResult)
 
@@ -137,6 +137,14 @@ class ConcurrentScheduler(AdaptiveScheduler):
                  workers: Optional[int] = None,
                  capacity: Optional[float] = None,
                  load_aware: bool = True, **kwargs):
+        # default drift detector: same thresholds as the serial
+        # scheduler's, plus a load discount — samples retired at high
+        # window occupancy carry residual contention noise the
+        # normalization can't fully cancel, and at 10^5-request scale
+        # that noise WILL eventually line up into a spurious window.
+        # Callers passing their own detector keep full control.
+        if kwargs.get("drift") is None:
+            kwargs["drift"] = DriftDetector(load_discount=0.5)
         super().__init__(model, **kwargs)
         assert window >= 1, window
         self.window = window
@@ -304,7 +312,11 @@ class ConcurrentScheduler(AdaptiveScheduler):
             batch: list[PendingRequest] = []
             while (self.queue and budget_left()
                    and len(inflight) + len(batch) < self.window):
-                batch.append(self._decide(self.queue.pop()))
+                try:
+                    req = self.queue.pop()
+                except IndexError:
+                    break   # deadline policy shed everything that was left
+                batch.append(self._decide(req))
                 decided += 1
             # batched cold path: one model search for every cold bucket
             # in this fill, measured on a quiesced pool — profiling

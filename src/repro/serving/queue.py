@@ -1,17 +1,28 @@
 """Multi-tenant workload request queue.
 
 A :class:`WorkloadRequest` is one unit of serving work: a named streamed
-workload plus its host data, tagged with the submitting tenant and a
-priority.  :class:`RequestQueue` orders them under one of three policies:
+workload plus its host data, tagged with the submitting tenant, a
+priority, and optionally an SLO deadline.  :class:`RequestQueue` orders
+them under one of four policies:
 
   ``fifo``     — global arrival order;
   ``priority`` — higher ``priority`` first, arrival order within a level
                  (stable: equal-priority requests never reorder);
   ``fair``     — round-robin across tenants, arrival order within a
-                 tenant, so one chatty tenant cannot starve the rest.
+                 tenant, so one chatty tenant cannot starve the rest;
+  ``deadline`` — earliest-deadline-first admission control: requests
+                 nearest their deadline are boosted to the front (ties
+                 broken by priority, then arrival), deadline-less
+                 requests run last, and work whose deadline has already
+                 expired by the time it is popped is *shed* — dropped
+                 and counted on :attr:`RequestQueue.shed` — instead of
+                 burning capacity on a guaranteed SLO miss.
 
-All three are deterministic given the submission sequence — the property
-the scheduler tests rely on.
+All four are deterministic given the submission sequence and (for
+``deadline``) the clock — the property the scheduler tests rely on.
+Deadline expiry is judged against an injectable clock
+(:mod:`repro.serving.clock`), so the trace harness sheds in virtual time
+and tests never race the wall clock.
 """
 from __future__ import annotations
 
@@ -19,8 +30,12 @@ import collections
 import dataclasses
 import heapq
 import itertools
+import math
+from typing import Optional
 
-POLICIES = ("fifo", "priority", "fair")
+from repro.serving.clock import SystemClock
+
+POLICIES = ("fifo", "priority", "fair", "deadline")
 
 
 @dataclasses.dataclass
@@ -34,18 +49,25 @@ class WorkloadRequest:
     priority: int = 0
     #: arrival sequence number, assigned at enqueue time
     seq: int = -1
+    #: arrival timestamp (scheduler clock), stamped at submit when unset
+    arrival_s: Optional[float] = None
+    #: absolute SLO deadline (same clock); None = no deadline
+    deadline_s: Optional[float] = None
 
 
 class RequestQueue:
-    def __init__(self, policy: str = "fifo"):
+    def __init__(self, policy: str = "fifo", clock=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.policy = policy
+        self.clock = clock if clock is not None else SystemClock()
         self._seq = itertools.count()
         self._fifo: collections.deque = collections.deque()
         self._heap: list = []
         self._per_tenant: dict[str, collections.deque] = {}
         self._rr: collections.deque = collections.deque()  # tenant rotation
+        #: requests dropped by deadline admission control, in shed order
+        self.shed: list[WorkloadRequest] = []
 
     def push(self, req: WorkloadRequest) -> WorkloadRequest:
         req.seq = next(self._seq)
@@ -53,6 +75,12 @@ class RequestQueue:
             self._fifo.append(req)
         elif self.policy == "priority":
             heapq.heappush(self._heap, (-req.priority, req.seq, req))
+        elif self.policy == "deadline":
+            # EDF: the nearest deadline is served first (the "boost" —
+            # near-deadline work overtakes everything slack), priority
+            # breaks deadline ties, deadline-less requests sort last
+            dl = req.deadline_s if req.deadline_s is not None else math.inf
+            heapq.heappush(self._heap, (dl, -req.priority, req.seq, req))
         else:  # fair
             if req.tenant not in self._per_tenant:
                 self._per_tenant[req.tenant] = collections.deque()
@@ -61,12 +89,30 @@ class RequestQueue:
         return req
 
     def pop(self) -> WorkloadRequest:
+        """Next request in policy order.
+
+        Under ``deadline`` this sheds every already-expired request it
+        uncovers (recorded on :attr:`shed`) before returning a live one —
+        so a non-empty queue can still raise ``IndexError`` when
+        everything left in it is expired.  Callers draining a deadline
+        queue must treat ``IndexError`` as "drained", not as a bug (the
+        schedulers do).
+        """
         if not len(self):
             raise IndexError("pop from an empty RequestQueue")
         if self.policy == "fifo":
             return self._fifo.popleft()
         if self.policy == "priority":
             return heapq.heappop(self._heap)[2]
+        if self.policy == "deadline":
+            now = self.clock.now()
+            while self._heap:
+                req = heapq.heappop(self._heap)[3]
+                if req.deadline_s is not None and req.deadline_s < now:
+                    self.shed.append(req)     # expired: shed, don't serve
+                    continue
+                return req
+            raise IndexError("every queued request was past its deadline")
         tenant = self._rr.popleft()
         req = self._per_tenant[tenant].popleft()
         if self._per_tenant[tenant]:
@@ -85,12 +131,13 @@ class RequestQueue:
         per-tenant backlog the round-robin rotation drains one-at-a-time:
         in any stretch where every tenant stays non-empty, each tenant is
         served exactly once per rotation (asserted in the tenancy
-        tests)."""
+        tests).  Under ``deadline``, expired-but-not-yet-shed requests
+        still count — they are only classified at pop time."""
         if self.policy == "fair":
             return {t: len(d) for t, d in self._per_tenant.items()}
         counts: dict[str, int] = {}
         items = (self._fifo if self.policy == "fifo"
-                 else (entry[2] for entry in self._heap))
+                 else (entry[-1] for entry in self._heap))
         for req in items:
             counts[req.tenant] = counts.get(req.tenant, 0) + 1
         return counts
@@ -98,7 +145,7 @@ class RequestQueue:
     def __len__(self) -> int:
         if self.policy == "fifo":
             return len(self._fifo)
-        if self.policy == "priority":
+        if self.policy in ("priority", "deadline"):
             return len(self._heap)
         return sum(len(d) for d in self._per_tenant.values())
 

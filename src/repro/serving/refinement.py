@@ -40,34 +40,60 @@ from repro.core.streams import StreamedRunner, profile_grid_interleaved
 class DriftDetector:
     """Rolling prediction-error window per workload bucket.
 
-    ``observe(key, rel_error)`` pushes one sample and returns True when
-    the bucket's mean error over the window crosses ``threshold`` (with
-    at least ``min_samples`` observed).  After a refinement the caller
-    ``reset``s the bucket: the window clears and a ``cooldown`` of
-    subsequent observations is ignored for triggering, so one drift event
-    yields one refinement, not a burst.
+    ``observe(key, rel_error, load_factor=...)`` pushes one sample and
+    returns True when the bucket's mean error over the window crosses
+    ``threshold`` (with at least ``min_samples`` observed).  After a
+    refinement the caller ``reset``s the bucket: the window clears and a
+    ``cooldown`` of subsequent observations is ignored entirely, so one
+    drift event yields one refinement, not a burst.
+
+    Cooldown observations are NOT accumulated into the window.  They
+    cover the refreshed entry's settling period — recompile stutter,
+    host-noise spikes on the first warm hits — and letting them pile up
+    meant the first post-cooldown observation was judged against a mean
+    of exactly the samples the cooldown existed to ignore, double-firing
+    the drift→refine loop under timing noise (the ``refinements == 2``
+    tier-1 failure this fixed).  A re-trigger now requires
+    ``min_samples`` fresh post-cooldown observations over threshold.
+
+    ``load_factor`` is the contention stamp the scheduler already
+    records per sample (window occupancy / host parallel capacity).
+    ``measured_s`` is normalized by it *before* the error is computed,
+    but the normalization is a model — the residual error it leaves
+    grows with contention.  ``load_discount`` (default 0: off) divides
+    each sample's contribution by ``1 + load_discount*(load_factor-1)``,
+    so a window full of occupancy-8 samples needs proportionally more
+    evidence to fire than an idle one, and contention at deep windows
+    cannot masquerade as model drift over a 10^5-request trace.  Genuine
+    drift still fires: a real 3x misprediction dwarfs the discount.
     """
 
     def __init__(self, *, window: int = 8, threshold: float = 1.0,
-                 min_samples: int = 2, cooldown: int = 2):
+                 min_samples: int = 2, cooldown: int = 2,
+                 load_discount: float = 0.0):
         assert window >= min_samples >= 1
         self.window = window
         self.threshold = threshold
         self.min_samples = min_samples
         self.cooldown = cooldown
+        self.load_discount = load_discount
         self._errors: dict[str, collections.deque] = {}
         self._cooldowns: dict[str, int] = {}
         self.triggers = 0
 
-    def observe(self, key: str, rel_error: Optional[float]) -> bool:
+    def observe(self, key: str, rel_error: Optional[float],
+                load_factor: float = 1.0) -> bool:
         if rel_error is None:
             return False
-        dq = self._errors.setdefault(
-            key, collections.deque(maxlen=self.window))
-        dq.append(float(rel_error))
         if self._cooldowns.get(key, 0) > 0:
+            # settling period after a refinement: ignored AND not
+            # accumulated — see the class docstring
             self._cooldowns[key] -= 1
             return False
+        discount = 1.0 + self.load_discount * max(0.0, load_factor - 1.0)
+        dq = self._errors.setdefault(
+            key, collections.deque(maxlen=self.window))
+        dq.append(float(rel_error) / discount)
         if len(dq) >= self.min_samples and \
                 sum(dq) / len(dq) > self.threshold:
             self.triggers += 1
@@ -88,7 +114,8 @@ class DriftDetector:
         by the same rules but over only its own samples."""
         return DriftDetector(window=self.window, threshold=self.threshold,
                              min_samples=self.min_samples,
-                             cooldown=self.cooldown)
+                             cooldown=self.cooldown,
+                             load_discount=self.load_discount)
 
 
 def contention_factor(inflight: int, capacity: Optional[float],
@@ -107,10 +134,20 @@ def contention_factor(inflight: int, capacity: Optional[float],
     This is the load-aware drift signal's core arithmetic: dividing
     ``measured_s`` by this factor before computing relative prediction
     error stops concurrent-mode contention from masquerading as model
-    drift."""
+    drift.
+
+    ``workers=0`` is a degenerate pool — nothing can overlap, so the
+    factor is exactly 1.0.  It used to silently mean "uncapped" (a
+    falsy-check bug): a caller probing an empty pool got its window
+    occupancy treated as concurrency and every measurement deflated.
+    ``workers=None`` (unknown pool size) remains uncapped on purpose."""
     if capacity is None:
         return 1.0
-    eff = min(inflight, workers) if workers else inflight
+    if workers is not None and workers < 0:
+        raise ValueError(f"workers must be >= 0, got {workers}")
+    if workers == 0:
+        return 1.0
+    eff = min(inflight, workers) if workers is not None else inflight
     return max(1.0, eff / max(capacity, 1e-9))
 
 

@@ -39,6 +39,7 @@ from repro.core.stream_config import SINGLE_STREAM, StreamConfig, \
     default_space
 from repro.core.streams import StreamedRunner, readback_outputs
 from repro.core.workloads import get_workload
+from repro.serving.clock import SystemClock
 from repro.serving.queue import RequestQueue, WorkloadRequest
 from repro.serving.refinement import DriftDetector, Refiner
 from repro.serving.telemetry import TelemetryLog, TelemetrySample, \
@@ -81,6 +82,10 @@ class PendingRequest:
     load_factor: float = 1.0       # contention normalization, set at retire
     defer_release: bool = False    # engine: runner held for a deferred
                                    # refinement, released after it runs
+    # latency accounting stamps (scheduler clock; arrival lives on req)
+    t_decide_s: Optional[float] = None
+    t_dispatch_s: Optional[float] = None
+    queue_depth: int = 0           # queue length observed at decide time
 
 
 class AdaptiveScheduler:
@@ -99,10 +104,15 @@ class AdaptiveScheduler:
                  isolate_tenants: bool = False,
                  tenants: Optional[TenantRegistry] = None,
                  warm_before_measure: bool = True,
-                 keep_outputs: bool = True):
+                 keep_outputs: bool = True,
+                 clock=None):
         self.model = model
         self.backend_name = backend
-        self.queue = RequestQueue(policy)
+        # one time source for every latency stamp and deadline judgment:
+        # real perf_counter in production, a VirtualClock under the trace
+        # harness / timing tests (repro.serving.clock)
+        self.clock = clock if clock is not None else SystemClock()
+        self.queue = RequestQueue(policy, clock=self.clock)
         self.cache = cache if cache is not None else TuningCache()
         self.candidates = list(candidates or default_space())
         self.telemetry = telemetry if telemetry is not None else TelemetryLog()
@@ -137,6 +147,8 @@ class AdaptiveScheduler:
     # -- request intake -------------------------------------------------------
 
     def submit(self, request: WorkloadRequest) -> WorkloadRequest:
+        if request.arrival_s is None:
+            request.arrival_s = self.clock.now()
         self.stats[f"tenant.{request.tenant}.submitted"] += 1
         return self.queue.push(request)
 
@@ -152,7 +164,11 @@ class AdaptiveScheduler:
         results = []
         while self.queue and (max_requests is None
                               or len(results) < max_requests):
-            results.append(self.step())
+            try:
+                req = self.queue.pop()
+            except IndexError:
+                break      # deadline policy shed everything that was left
+            results.append(self._process(req))
         return results
 
     def step(self) -> RequestResult:
@@ -199,7 +215,9 @@ class AdaptiveScheduler:
                              namespace=ctx.namespace)
         pending = PendingRequest(req=req, runner=runner, key=key,
                                  n_rows=n_rows, order=self._order,
-                                 tenant_ctx=ctx)
+                                 tenant_ctx=ctx,
+                                 t_decide_s=self.clock.now(),
+                                 queue_depth=len(self.queue))
         self._order += 1
         hit = self.cache.get(key, valid=lambda r: (
             r.config.partitions * r.config.tasks <= n_rows))
@@ -338,6 +356,7 @@ class AdaptiveScheduler:
         (bucket, config) pair warms up so measured runtime is execution,
         not compilation."""
         runner, key = pending.runner, pending.key
+        pending.t_dispatch_s = self.clock.now()
         config = pending.entry.config
         if self.warm_before_measure and (key, config) not in self._warmed:
             runner.warmup(config)
@@ -386,11 +405,16 @@ class AdaptiveScheduler:
         rel = relative_error(measured_norm_s, predicted_s)
 
         refined = False
-        if ctx.drift.observe(key, rel):
+        if ctx.drift.observe(key, rel, load_factor=load):
             ctx.drift.reset(key)
             self._refine(pending, ctx, key, entry)
             refined = True
 
+        t_retire = self.clock.now()
+        latency = (t_retire - req.arrival_s
+                   if req.arrival_s is not None else None)
+        slo_violation = (req.deadline_s is not None
+                         and t_retire > req.deadline_s)
         self._seq += 1
         sample = TelemetrySample(
             seq=self._seq, tenant=req.tenant, workload=pending.runner.wl.name,
@@ -399,11 +423,17 @@ class AdaptiveScheduler:
             predicted_s=predicted_s, measured_s=measured_s, rel_error=rel,
             refined=refined, source=entry.source,
             inflight=pending.inflight, load_factor=load,
-            measured_norm_s=measured_norm_s)
+            measured_norm_s=measured_norm_s,
+            t_enqueue_s=req.arrival_s, t_decide_s=pending.t_decide_s,
+            t_dispatch_s=pending.t_dispatch_s, t_retire_s=t_retire,
+            latency_s=latency, deadline_s=req.deadline_s,
+            slo_violation=slo_violation, queue_depth=pending.queue_depth)
         self.telemetry.append(sample)
 
         self.stats["requests"] += 1
         self.stats["cache_hits" if pending.cache_hit else "cold_misses"] += 1
+        if slo_violation:
+            self.stats["slo_violations"] += 1
         self.stats[f"tenant.{req.tenant}.served"] += 1
         ctx.served += 1
 

@@ -46,6 +46,26 @@ class TelemetrySample:
     #: measured_s / load_factor — the contention-normalized runtime that
     #: rel_error (and therefore drift detection) is computed from
     measured_norm_s: Optional[float] = None
+    # -- latency accounting (the virtual-clock layer) ----------------------
+    # All four stamps share the scheduler's clock (``SystemClock`` in
+    # production, ``VirtualClock`` under the trace harness / tests):
+    #: queue arrival (``WorkloadRequest.arrival_s``, stamped at submit)
+    t_enqueue_s: Optional[float] = None
+    #: placement decision made (cache lookup / model search done)
+    t_decide_s: Optional[float] = None
+    #: execution handed to the backend (pool submit / serial dispatch)
+    t_dispatch_s: Optional[float] = None
+    #: result retired (telemetry + drift observed)
+    t_retire_s: Optional[float] = None
+    #: t_retire_s - t_enqueue_s: the end-to-end latency the SLO is on
+    latency_s: Optional[float] = None
+    #: absolute SLO deadline carried by the request (None = no SLO)
+    deadline_s: Optional[float] = None
+    #: retired after its deadline (shed requests never get a sample —
+    #: they are counted on the queue, not here)
+    slo_violation: bool = False
+    #: queue length observed at decision time
+    queue_depth: int = 0
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -54,6 +74,37 @@ class TelemetrySample:
     def from_json(d: dict) -> "TelemetrySample":
         fields = {f.name for f in dataclasses.fields(TelemetrySample)}
         return TelemetrySample(**{k: v for k, v in d.items() if k in fields})
+
+
+def percentile(sorted_values, q: float) -> float:
+    """Linear-interpolated percentile of an ascending-sorted sequence
+    (``q`` in [0, 1]).  The one primitive the latency reports need —
+    avoids dragging numpy into the telemetry hot path."""
+    if not sorted_values:
+        raise ValueError("percentile of an empty sequence")
+    if len(sorted_values) == 1:
+        return float(sorted_values[0])
+    pos = q * (len(sorted_values) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_values) - 1)
+    frac = pos - lo
+    return float(sorted_values[lo] * (1 - frac) + sorted_values[hi] * frac)
+
+
+def latency_stats(latencies) -> Optional[dict]:
+    """p50/p95/p99 + mean/max over a sequence of latency seconds; None
+    when the sequence is empty (e.g. a trace where nothing retired)."""
+    lats = sorted(latencies)
+    if not lats:
+        return None
+    return {
+        "p50_s": percentile(lats, 0.50),
+        "p95_s": percentile(lats, 0.95),
+        "p99_s": percentile(lats, 0.99),
+        "mean_s": sum(lats) / len(lats),
+        "max_s": lats[-1],
+        "n": len(lats),
+    }
 
 
 def relative_error(measured_s: float,
@@ -144,12 +195,19 @@ class TelemetryLog:
             t["refinements"] += bool(s.refined)
             if s.rel_error is not None:
                 t["errors"].append(s.rel_error)
+        lats = [s.latency_s for s in self.samples if s.latency_s is not None]
+        with_deadline = [s for s in self.samples if s.deadline_s is not None]
+        violations = sum(s.slo_violation for s in with_deadline)
         return {
             "requests": n,
             "cache_hits": hits,
             "hit_rate": hits / n if n else 0.0,
             "refinements": sum(s.refined for s in self.samples),
             "total_measured_s": sum(s.measured_s for s in self.samples),
+            "latency": latency_stats(lats),
+            "slo_violations": violations,
+            "slo_violation_rate": (violations / len(with_deadline)
+                                   if with_deadline else None),
             "mean_rel_error": (sum(errs) / len(errs)) if errs else None,
             "mean_rel_error_by_workload": {
                 w: sum(v) / len(v) for w, v in sorted(per_workload.items())},

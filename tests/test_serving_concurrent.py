@@ -344,3 +344,26 @@ def test_execution_context_swap_rebinds_chunked():
     c2, s2 = wl.make_data(32, np.random.default_rng(1))
     ctx.swap_buffers(c2, s2)
     assert ctx.chunked is c2 and ctx.shared is s2
+
+
+def test_engine_latency_stamps_monotone():
+    """Every retired request carries the full enqueue→decide→dispatch→
+    retire stamp chain on one clock, in order, with latency_s equal to
+    the retire-minus-enqueue span — the trace harness and the SLO
+    accounting both lean on these invariants."""
+    from repro.serving import TelemetryLog
+    eng = ConcurrentScheduler(_BatchedStub(), window=3,
+                              drift=_lenient_drift(),
+                              telemetry=TelemetryLog(),
+                              keep_outputs=False)
+    with eng:
+        eng.submit_all(make_trace(WORKLOADS, occurrences=2, seed=0))
+        eng.run()
+    assert len(eng.telemetry) == 2 * len(WORKLOADS)
+    for s in eng.telemetry:
+        assert s.t_enqueue_s is not None
+        assert s.t_enqueue_s <= s.t_decide_s <= s.t_dispatch_s \
+            <= s.t_retire_s
+        assert s.latency_s == pytest.approx(s.t_retire_s - s.t_enqueue_s)
+        assert s.latency_s >= s.measured_s
+        assert s.queue_depth >= 0
