@@ -3,7 +3,7 @@ JSON against the committed baseline and fail CI on a real regression.
 
     python benchmarks/check_regression.py FRESH BASELINE [--tolerance 0.25]
 
-Works on all four benchmark artifacts:
+Works on all five benchmark artifacts:
 
   BENCH_serving.json  (``--serve-concurrent``)  gated on
       ``capacity_fraction`` — the engine's speedup normalized by the SAME
@@ -29,6 +29,12 @@ Works on all four benchmark artifacts:
       (higher is better — EDF + shedding must keep beating FIFO).
       These numbers are deterministic given the seed (no wall clock in
       the loop), so even a tight tolerance is noise-free.
+  BENCH_overhead.json (``--serve-real-trace``)  gated on
+      ``python_overhead_fraction`` — coordinator decide+retire wall over
+      total wall in the real-engine replay (lower is better).  A ratio
+      of two times from the same run, so shared-host drift largely
+      cancels; gate it with a loose tolerance anyway — the numerator is
+      small and absolute, not seed-deterministic.
 
 A higher-is-better metric regresses when
 ``fresh < baseline * (1 - tolerance)``; a lower-is-better one when
@@ -71,6 +77,10 @@ GATED_METRICS = {
     "deadline_vs_fifo_violation_improvement":
         ("higher", "fifo / deadline SLO-violation rate on the same "
                    "trace"),
+    "python_overhead_fraction":
+        ("lower", "coordinator (decide+retire) wall over total wall in "
+                  "the real-engine trace replay — same-run ratio, host "
+                  "drift largely cancels"),
 }
 
 # context printed next to the verdict but never gated (absolute numbers

@@ -177,6 +177,8 @@ def adaptive_serve(
     model_dir=None,
     seed: int = 0,
     verbose: bool = True,
+    trace_out: Optional[str] = None,
+    metrics_out: Optional[str] = None,
 ) -> dict:
     """Serve ``n_requests`` of a mixed multi-tenant trace adaptively.
 
@@ -200,10 +202,17 @@ def adaptive_serve(
     prediction error); the per-request JSONL stream lands at
     ``telemetry_path`` when given, and new tuning-cache entries persist
     to ``cache_path``.
+
+    ``trace_out`` switches span tracing on and exports the run as Chrome
+    trace-event JSON (load it in https://ui.perfetto.dev); a sibling
+    ``.jsonl`` with the raw spans lands next to it.  ``metrics_out``
+    switches the metrics registry on and saves its snapshot there;
+    either flag also adds a ``metrics`` block to the returned summary.
     """
     from repro.core.autotuner import TuningCache
     from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
-                               DriftDetector, TelemetryLog, make_trace)
+                               DriftDetector, MetricsRegistry,
+                               TelemetryLog, Tracer, make_trace)
 
     serving_model, model_info = resolve_serving_model(
         model, model_dir, verbose=verbose)
@@ -212,6 +221,8 @@ def adaptive_serve(
                        tenants=tenants if tenants > 0
                        else ("tenant-a", "tenant-b"),
                        seed=seed)[:n_requests]
+    tracer = Tracer() if trace_out else None
+    metrics = MetricsRegistry() if (metrics_out or trace_out) else None
     common = dict(
         backend=backend, policy=policy,
         cache=TuningCache(cache_path),
@@ -219,7 +230,8 @@ def adaptive_serve(
         drift=DriftDetector(threshold=drift_threshold),
         isolate_tenants=tenants > 0,
         model_tag=model_info["artifact_id"],
-        keep_outputs=False)
+        keep_outputs=False,
+        tracer=tracer, metrics=metrics)
     if window > 1:
         sched = ConcurrentScheduler(serving_model,
                                     window=window, workers=workers,
@@ -262,6 +274,26 @@ def adaptive_serve(
         summary["shed"] = len(sched.queue.shed)
         if cache_path:
             sched.cache.save()
+    if metrics is not None:
+        snap = metrics.snapshot()
+        # the compact dashboard block: single-valued families inline
+        summary["metrics"] = {
+            name: (fam["values"][0]["value"]
+                   if len(fam["values"]) == 1
+                   and not fam["values"][0]["labels"] else fam)
+            for name, fam in snap.items()}
+        if metrics_out:
+            metrics.save(metrics_out)
+            if verbose:
+                print(f"metrics snapshot -> {metrics_out}",
+                      file=sys.stderr)
+    if tracer is not None and trace_out:
+        n = tracer.export_chrome(trace_out)
+        stem = trace_out[:-5] if trace_out.endswith(".json") else trace_out
+        tracer.export_jsonl(stem + ".jsonl")
+        if verbose:
+            print(f"chrome trace ({n} spans) -> {trace_out} "
+                  f"(+ {stem}.jsonl)", file=sys.stderr)
     return summary
 
 
@@ -305,6 +337,14 @@ def main() -> None:
     ap.add_argument("--model-dir", default=None,
                     help="model registry root (default: REPRO_MODEL_DIR "
                          "or <repo>/models)")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable span tracing; write Chrome trace-event "
+                         "JSON here (Perfetto-loadable; a .jsonl with "
+                         "raw spans lands alongside)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable the metrics registry; write its "
+                         "snapshot JSON here (summary also gains a "
+                         "'metrics' block)")
     args = ap.parse_args()
 
     if args.adaptive:
@@ -315,7 +355,8 @@ def main() -> None:
             telemetry_path=args.telemetry,
             cache_path=args.tuning_cache, window=args.window,
             workers=args.workers, tenants=args.tenants,
-            model=args.model, model_dir=args.model_dir)
+            model=args.model, model_dir=args.model_dir,
+            trace_out=args.trace_out, metrics_out=args.metrics_out)
         print(json.dumps(summary, indent=2))
         return
 

@@ -22,6 +22,10 @@ private fork of the shared base model (``tenancy.py``).
 from repro.serving.clock import SystemClock, VirtualClock
 from repro.serving.engine import (ConcurrentScheduler, ContextPool,
                                   OrderedRetirer)
+from repro.serving.observability import (NULL_METRICS, NULL_TRACER,
+                                         HotPathProfiler, MetricsRegistry,
+                                         NullMetrics, NullTracer, Tracer,
+                                         aggregate_stage_times)
 from repro.serving.queue import POLICIES, RequestQueue, WorkloadRequest
 from repro.serving.refinement import (DriftDetector, RefinementResult,
                                       Refiner, contention_factor)
@@ -46,4 +50,7 @@ __all__ = [
     "ConcurrentScheduler", "ContextPool", "OrderedRetirer",
     "TelemetryLog", "TelemetrySample", "relative_error",
     "TenantContext", "TenantRegistry",
+    "Tracer", "NullTracer", "NULL_TRACER",
+    "MetricsRegistry", "NullMetrics", "NULL_METRICS",
+    "HotPathProfiler", "aggregate_stage_times",
 ]

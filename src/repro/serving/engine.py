@@ -345,6 +345,7 @@ class ConcurrentScheduler(AdaptiveScheduler):
                 p.bucket_idx = self.retirer.issue(p.key)
                 p.inflight = occupancy
                 inflight[self.pool.submit(self._execute, p)] = p
+            self._m_inflight.set(occupancy)
             if not inflight:
                 continue
             # retire whatever completed first (out of order)
@@ -352,6 +353,7 @@ class ConcurrentScheduler(AdaptiveScheduler):
             check(self._retire_completed(done, inflight, results))
 
         self._flush_refinements()          # pool is idle: nothing in flight
+        self._m_inflight.set(0)
         assert self.retirer.held == 0, "completions left unretired"
         assert not inflight, "futures left in flight"
         self.stats["ctx_reuses"] = self.ctx_pool.reuses

@@ -53,10 +53,14 @@ class WorkloadRequest:
     arrival_s: Optional[float] = None
     #: absolute SLO deadline (same clock); None = no deadline
     deadline_s: Optional[float] = None
+    #: request trace id, assigned at enqueue (derived from ``seq``, so
+    #: it is deterministic per submission order); every span and
+    #: telemetry sample for this request carries it
+    trace_id: Optional[str] = None
 
 
 class RequestQueue:
-    def __init__(self, policy: str = "fifo", clock=None):
+    def __init__(self, policy: str = "fifo", clock=None, metrics=None):
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
         self.policy = policy
@@ -68,9 +72,20 @@ class RequestQueue:
         self._rr: collections.deque = collections.deque()  # tenant rotation
         #: requests dropped by deadline admission control, in shed order
         self.shed: list[WorkloadRequest] = []
+        # observability: shed counter + depth gauge, no-ops by default
+        if metrics is None:
+            from repro.serving.observability import NULL_METRICS
+            metrics = NULL_METRICS
+        self._m_shed = metrics.counter("serving.queue.shed")
+        self._m_depth = metrics.gauge("serving.queue.depth")
 
     def push(self, req: WorkloadRequest) -> WorkloadRequest:
         req.seq = next(self._seq)
+        if req.trace_id is None:
+            # deterministic per submission order; survives any policy's
+            # reordering and the engine's out-of-order retirement
+            req.trace_id = f"r{req.seq:06d}"
+        self._m_depth.set(len(self) + 1)
         if self.policy == "fifo":
             self._fifo.append(req)
         elif self.policy == "priority":
@@ -110,6 +125,7 @@ class RequestQueue:
                 req = heapq.heappop(self._heap)[3]
                 if req.deadline_s is not None and req.deadline_s < now:
                     self.shed.append(req)     # expired: shed, don't serve
+                    self._m_shed.inc()
                     continue
                 return req
             raise IndexError("every queued request was past its deadline")

@@ -80,6 +80,9 @@ class DriftDetector:
         self._errors: dict[str, collections.deque] = {}
         self._cooldowns: dict[str, int] = {}
         self.triggers = 0
+        #: observations swallowed by a post-refinement cooldown — the
+        #: "suppressions" half of the drift fires-vs-suppressions metric
+        self.suppressed = 0
 
     def observe(self, key: str, rel_error: Optional[float],
                 load_factor: float = 1.0) -> bool:
@@ -89,6 +92,7 @@ class DriftDetector:
             # settling period after a refinement: ignored AND not
             # accumulated — see the class docstring
             self._cooldowns[key] -= 1
+            self.suppressed += 1
             return False
         discount = 1.0 + self.load_discount * max(0.0, load_factor - 1.0)
         dq = self._errors.setdefault(
@@ -169,7 +173,8 @@ class Refiner:
     def __init__(self, model, cache: TuningCache, *,
                  candidates: Optional[Sequence[StreamConfig]] = None,
                  top_k: int = 3, reps: int = 1,
-                 refit_epochs: int = 150, refit_lr: float = 3e-3):
+                 refit_epochs: int = 150, refit_lr: float = 3e-3,
+                 clock=None):
         self.model = model
         self.cache = cache
         self.candidates = list(candidates or default_space())
@@ -178,6 +183,14 @@ class Refiner:
         self.refit_epochs = refit_epochs
         self.refit_lr = refit_lr
         self.history: list[RefinementResult] = []
+        # the owning scheduler binds its own clock here (one time source
+        # per scheduler — clock.py); an unbound standalone refiner falls
+        # back to perf_counter
+        self.clock = clock
+
+    def _now(self) -> float:
+        return (self.clock.now() if self.clock is not None
+                else time.perf_counter())
 
     def refine(self, runner: StreamedRunner, key: str,
                prog_feats: Optional[np.ndarray],
@@ -189,7 +202,7 @@ class Refiner:
         tenant's own (forked) model so measured feedback never refits a
         model other tenants serve from."""
         model = model if model is not None else self.model
-        t0 = time.perf_counter()
+        t0 = self._now()
         if prog_feats is None:
             # hit on a persisted cache from a previous process: the raw
             # features were never extracted here, so re-profile them
@@ -236,6 +249,6 @@ class Refiner:
             old_config=current.config if current is not None else None,
             new_config=best, measured=measured, t_single_s=t_single,
             speedup=float(speedup), refit_loss=refit_loss,
-            seconds=time.perf_counter() - t0)
+            seconds=self._now() - t0)
         self.history.append(result)
         return result

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import time
 from typing import Optional, Sequence
 
 import jax
@@ -40,6 +39,7 @@ from repro.core.stream_config import SINGLE_STREAM, StreamConfig, \
 from repro.core.streams import StreamedRunner, readback_outputs
 from repro.core.workloads import get_workload
 from repro.serving.clock import SystemClock
+from repro.serving.observability import NULL_METRICS, NULL_TRACER, STAGES
 from repro.serving.queue import RequestQueue, WorkloadRequest
 from repro.serving.refinement import DriftDetector, Refiner
 from repro.serving.telemetry import TelemetryLog, TelemetrySample, \
@@ -105,20 +105,48 @@ class AdaptiveScheduler:
                  tenants: Optional[TenantRegistry] = None,
                  warm_before_measure: bool = True,
                  keep_outputs: bool = True,
-                 clock=None):
+                 clock=None,
+                 tracer=None,
+                 metrics=None):
         self.model = model
         self.backend_name = backend
-        # one time source for every latency stamp and deadline judgment:
-        # real perf_counter in production, a VirtualClock under the trace
-        # harness / timing tests (repro.serving.clock)
+        # ONE time source for every latency stamp, deadline judgment,
+        # span timestamp, and tuning-overhead measurement: real
+        # perf_counter in production, a VirtualClock under the trace
+        # harness / timing tests (repro.serving.clock).  The queue, the
+        # refiner, and the tracer are all bound to this same instance
+        # below, so their clocks can never disagree.
         self.clock = clock if clock is not None else SystemClock()
-        self.queue = RequestQueue(policy, clock=self.clock)
+        # observability: both default to shared no-op singletons whose
+        # hot-path calls allocate nothing (asserted by a micro-test)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if self.tracer.enabled and self.tracer.clock is None:
+            self.tracer.clock = self.clock
+        self.metrics = metrics if metrics is not None else NULL_METRICS
+        self.queue = RequestQueue(policy, clock=self.clock,
+                                  metrics=self.metrics)
         self.cache = cache if cache is not None else TuningCache()
         self.candidates = list(candidates or default_space())
         self.telemetry = telemetry if telemetry is not None else TelemetryLog()
         self.drift = drift if drift is not None else DriftDetector()
         self.refiner = refiner if refiner is not None else Refiner(
             model, self.cache, candidates=self.candidates)
+        if self.refiner.clock is None:
+            self.refiner.clock = self.clock
+        # pre-bound instruments: hot-path metric updates are one method
+        # call on a resolved object (a no-op singleton when disabled)
+        m = self.metrics
+        self._m_stage = {s: m.histogram(f"serving.stage.{s}.seconds")
+                         for s in STAGES}
+        self._m_requests = m.counter("serving.requests")
+        self._m_searches = m.counter("serving.model.searches")
+        self._m_batch_size = m.histogram("serving.cold_batch.size",
+                                         buckets=(1, 2, 4, 8, 16, 32, 64))
+        self._m_drift_fired = m.counter("serving.drift.fired")
+        self._m_refinements = m.counter("serving.refinements")
+        self._m_slo_violations = m.counter("serving.slo.violations")
+        self._m_queue_depth = m.gauge("serving.queue.depth")
+        self._m_inflight = m.gauge("serving.inflight")
         # tenant isolation: with ``isolate_tenants`` every tenant gets a
         # private cache namespace, drift windows, and (on first refit) a
         # fork of the shared base model.  Off by default — the registry
@@ -207,38 +235,46 @@ class AdaptiveScheduler:
     def _decide(self, req: WorkloadRequest) -> PendingRequest:
         """Cache lookup + anchor bookkeeping.  A returned ``entry=None``
         means the request is cold and needs a tune before dispatch."""
-        runner = self._make_runner(req)
-        n_rows = next(iter(req.chunked.values())).shape[0]
-        ctx = self.tenancy.get(req.tenant)
-        key = self.cache.key(runner.wl.name, req.chunked, req.shared,
-                             self.backend_name, self.model_tag,
-                             namespace=ctx.namespace)
-        pending = PendingRequest(req=req, runner=runner, key=key,
-                                 n_rows=n_rows, order=self._order,
-                                 tenant_ctx=ctx,
-                                 t_decide_s=self.clock.now(),
-                                 queue_depth=len(self.queue))
-        self._order += 1
-        hit = self.cache.get(key, valid=lambda r: (
-            r.config.partitions * r.config.tasks <= n_rows))
-        if hit is not None:
-            pending.entry, pending.cache_hit = hit, True
-            # warm hit from a cache persisted by a previous process: the
-            # single-stream anchor was never profiled here, and without
-            # it predicted runtime — and therefore drift detection —
-            # would stay disabled for this bucket.  Deferred to
-            # _measure_anchor so the engine can quiesce its pool first
-            # (an anchor measured under contention would bias rel_error
-            # for the bucket's lifetime).
-            pending.needs_anchor = key not in self._t_single
+        t0 = self.clock.now()
+        with self.tracer.span("decide", trace_id=req.trace_id,
+                              tenant=req.tenant, workload=req.workload):
+            runner = self._make_runner(req)
+            n_rows = next(iter(req.chunked.values())).shape[0]
+            ctx = self.tenancy.get(req.tenant)
+            key = self.cache.key(runner.wl.name, req.chunked, req.shared,
+                                 self.backend_name, self.model_tag,
+                                 namespace=ctx.namespace)
+            pending = PendingRequest(req=req, runner=runner, key=key,
+                                     n_rows=n_rows, order=self._order,
+                                     tenant_ctx=ctx,
+                                     t_decide_s=self.clock.now(),
+                                     queue_depth=len(self.queue))
+            self._order += 1
+            hit = self.cache.get(key, valid=lambda r: (
+                r.config.partitions * r.config.tasks <= n_rows))
+            if hit is not None:
+                pending.entry, pending.cache_hit = hit, True
+                # warm hit from a cache persisted by a previous process:
+                # the single-stream anchor was never profiled here, and
+                # without it predicted runtime — and therefore drift
+                # detection — would stay disabled for this bucket.
+                # Deferred to _measure_anchor so the engine can quiesce
+                # its pool first (an anchor measured under contention
+                # would bias rel_error for the bucket's lifetime).
+                pending.needs_anchor = key not in self._t_single
+        self._m_queue_depth.set(len(self.queue))
+        self._m_stage["decide"].observe(self.clock.now() - t0)
         return pending
 
     def _measure_anchor(self, pending: PendingRequest) -> None:
         """One measured single-stream run restores the runtime anchor
         (and with it drift detection) for a persisted warm hit."""
         if pending.key not in self._t_single:
-            self._t_single[pending.key] = pending.runner.run(
-                SINGLE_STREAM, reps=1)
+            with self.tracer.span("tune.anchor",
+                                  trace_id=pending.req.trace_id,
+                                  key=pending.key):
+                self._t_single[pending.key] = pending.runner.run(
+                    SINGLE_STREAM, reps=1)
         pending.needs_anchor = False
 
     # -- stage 1b: cold tune --------------------------------------------------
@@ -265,17 +301,21 @@ class AdaptiveScheduler:
         return self.model
 
     def _tune_cold(self, pending: PendingRequest) -> TuneResult:
-        t0 = time.perf_counter()
-        feats = self._extract(pending)
-        t_feat = time.perf_counter() - t0
-        cands = self._feasible_configs(pending.n_rows)
-        best, preds, t_search = search_best(self._model_for(pending),
-                                            feats, cands)
-        self.stats["model_searches"] += 1
-        result = TuneResult(best, float(np.max(preds)), t_feat, t_search,
-                            backend=self.backend_name, source="model")
-        self.cache.put(pending.key, result)
-        pending.entry = result
+        t0 = self.clock.now()
+        with self.tracer.span("tune.cold", trace_id=pending.req.trace_id,
+                              workload=pending.req.workload):
+            feats = self._extract(pending)
+            t_feat = self.clock.now() - t0
+            cands = self._feasible_configs(pending.n_rows)
+            best, preds, t_search = search_best(self._model_for(pending),
+                                                feats, cands)
+            self.stats["model_searches"] += 1
+            self._m_searches.inc()
+            result = TuneResult(best, float(np.max(preds)), t_feat, t_search,
+                                backend=self.backend_name, source="model")
+            self.cache.put(pending.key, result)
+            pending.entry = result
+        self._m_stage["tune"].observe(self.clock.now() - t0)
         return result
 
     def _tune_cold_batch(self, pendings: Sequence[PendingRequest]) -> None:
@@ -299,39 +339,50 @@ class AdaptiveScheduler:
             by_key.setdefault(p.key, p)
         uniques = list(by_key.values())
 
-        t0 = time.perf_counter()
-        F = np.stack([self._extract(p) for p in uniques])
-        t_feat = time.perf_counter() - t0
-        feasible = np.stack([self._cand_cost <= p.n_rows for p in uniques])
+        t_batch0 = self.clock.now()
+        self._m_batch_size.observe(len(uniques))
+        with self.tracer.span("tune.cold.batch",
+                              trace_id=uniques[0].req.trace_id,
+                              buckets=len(uniques),
+                              requests=len(pendings)):
+            t0 = self.clock.now()
+            F = np.stack([self._extract(p) for p in uniques])
+            t_feat = self.clock.now() - t0
+            feasible = np.stack(
+                [self._cand_cost <= p.n_rows for p in uniques])
 
-        groups: dict[int, list[int]] = {}
-        for i, p in enumerate(uniques):
-            groups.setdefault(id(self._model_for(p)), []).append(i)
+            groups: dict[int, list[int]] = {}
+            for i, p in enumerate(uniques):
+                groups.setdefault(id(self._model_for(p)), []).append(i)
 
-        # feature time was paid once across ALL uniques; search time is
-        # per model-group — each term amortized over what it covered
-        per_feat = t_feat / len(uniques)
-        for idxs in groups.values():
-            model = self._model_for(uniques[idxs[0]])
-            picks, best_preds, _, t_search = search_best_batch(
-                model, F[idxs], self.candidates, feasible=feasible[idxs])
-            self.stats["model_searches"] += 1
-            self.stats["batched_searches"] += 1
-            self.stats["batched_search_programs"] += len(idxs)
-            per_search = t_search / len(idxs)
+            # feature time was paid once across ALL uniques; search time
+            # is per model-group — each term amortized over what it
+            # covered
+            per_feat = t_feat / len(uniques)
+            for idxs in groups.values():
+                model = self._model_for(uniques[idxs[0]])
+                picks, best_preds, _, t_search = search_best_batch(
+                    model, F[idxs], self.candidates,
+                    feasible=feasible[idxs])
+                self.stats["model_searches"] += 1
+                self.stats["batched_searches"] += 1
+                self.stats["batched_search_programs"] += len(idxs)
+                self._m_searches.inc()
+                per_search = t_search / len(idxs)
 
-            for i, pick, pred in zip(idxs, picks, best_preds):
-                p = uniques[i]
-                if not np.isfinite(pred):      # every candidate infeasible
-                    pick, pred = SINGLE_STREAM, float(
-                        model.predict_configs(self._feats[p.key],
-                                              [SINGLE_STREAM])[0])
-                result = TuneResult(pick, float(pred), per_feat,
-                                    per_search,
-                                    backend=self.backend_name,
-                                    source="model")
-                self.cache.put(p.key, result)
-                p.entry = result
+                for i, pick, pred in zip(idxs, picks, best_preds):
+                    p = uniques[i]
+                    if not np.isfinite(pred):  # every candidate infeasible
+                        pick, pred = SINGLE_STREAM, float(
+                            model.predict_configs(self._feats[p.key],
+                                                  [SINGLE_STREAM])[0])
+                    result = TuneResult(pick, float(pred), per_feat,
+                                        per_search,
+                                        backend=self.backend_name,
+                                        source="model")
+                    self.cache.put(p.key, result)
+                    p.entry = result
+        self._m_stage["tune"].observe(self.clock.now() - t_batch0)
         # same-bucket duplicates inside one batch are warm hits on the
         # representative's fresh entry — unless their own row count makes
         # that config unsplittable (possible within one shape-bucket
@@ -358,18 +409,25 @@ class AdaptiveScheduler:
         runner, key = pending.runner, pending.key
         pending.t_dispatch_s = self.clock.now()
         config = pending.entry.config
-        if self.warm_before_measure and (key, config) not in self._warmed:
-            runner.warmup(config)
-            self._warmed.add((key, config))
-        t0 = time.perf_counter()
-        outs = runner.dispatch(config)
-        jax.block_until_ready(outs)
-        # read back like StreamedRunner.run does — every output leaf —
-        # so measured_s and the single-stream prediction anchor are timed
-        # on the same basis (dispatch + compute + D2H); otherwise
-        # rel_error carries a constant bias on transfer-heavy workloads
-        readback_outputs(outs)
-        return outs, time.perf_counter() - t0
+        with self.tracer.span("dispatch", trace_id=pending.req.trace_id,
+                              partitions=config.partitions,
+                              tasks=config.tasks):
+            if self.warm_before_measure and \
+                    (key, config) not in self._warmed:
+                runner.warmup(config)
+                self._warmed.add((key, config))
+            t0 = self.clock.now()
+            outs = runner.dispatch(config)
+            jax.block_until_ready(outs)
+            # read back like StreamedRunner.run does — every output leaf
+            # — so measured_s and the single-stream prediction anchor are
+            # timed on the same basis (dispatch + compute + D2H);
+            # otherwise rel_error carries a constant bias on
+            # transfer-heavy workloads
+            readback_outputs(outs)
+            measured_s = self.clock.now() - t0
+        self._m_stage["dispatch"].observe(measured_s)
+        return outs, measured_s
 
     # -- stage 3: retire ------------------------------------------------------
 
@@ -394,48 +452,65 @@ class AdaptiveScheduler:
         observed on the request tenant's own windows, and a triggered
         refinement refits the tenant's fork of the model — never the
         shared base another tenant serves from."""
+        t_stage0 = self.clock.now()
         req, key, entry = pending.req, pending.key, pending.entry
         ctx = pending.tenant_ctx if pending.tenant_ctx is not None \
             else self.tenancy.get(req.tenant)
-        config = entry.config
-        predicted_s = self._predicted_runtime(key, entry)
-        load = self._load_factor(pending)
-        pending.load_factor = load
-        measured_norm_s = measured_s / load
-        rel = relative_error(measured_norm_s, predicted_s)
+        with self.tracer.span("retire", trace_id=req.trace_id,
+                              tenant=req.tenant,
+                              cache_hit=pending.cache_hit):
+            config = entry.config
+            predicted_s = self._predicted_runtime(key, entry)
+            load = self._load_factor(pending)
+            pending.load_factor = load
+            measured_norm_s = measured_s / load
+            rel = relative_error(measured_norm_s, predicted_s)
 
-        refined = False
-        if ctx.drift.observe(key, rel, load_factor=load):
-            ctx.drift.reset(key)
-            self._refine(pending, ctx, key, entry)
-            refined = True
+            refined = False
+            if ctx.drift.observe(key, rel, load_factor=load):
+                ctx.drift.reset(key)
+                self._m_drift_fired.inc()
+                self._refine(pending, ctx, key, entry)
+                refined = True
 
-        t_retire = self.clock.now()
-        latency = (t_retire - req.arrival_s
-                   if req.arrival_s is not None else None)
-        slo_violation = (req.deadline_s is not None
-                         and t_retire > req.deadline_s)
-        self._seq += 1
-        sample = TelemetrySample(
-            seq=self._seq, tenant=req.tenant, workload=pending.runner.wl.name,
-            key=key, backend=self.backend_name, partitions=config.partitions,
-            tasks=config.tasks, cache_hit=pending.cache_hit,
-            predicted_s=predicted_s, measured_s=measured_s, rel_error=rel,
-            refined=refined, source=entry.source,
-            inflight=pending.inflight, load_factor=load,
-            measured_norm_s=measured_norm_s,
-            t_enqueue_s=req.arrival_s, t_decide_s=pending.t_decide_s,
-            t_dispatch_s=pending.t_dispatch_s, t_retire_s=t_retire,
-            latency_s=latency, deadline_s=req.deadline_s,
-            slo_violation=slo_violation, queue_depth=pending.queue_depth)
-        self.telemetry.append(sample)
+            t_retire = self.clock.now()
+            latency = (t_retire - req.arrival_s
+                       if req.arrival_s is not None else None)
+            slo_violation = (req.deadline_s is not None
+                             and t_retire > req.deadline_s)
+            self._seq += 1
+            sample = TelemetrySample(
+                seq=self._seq, tenant=req.tenant,
+                workload=pending.runner.wl.name,
+                key=key, backend=self.backend_name,
+                partitions=config.partitions,
+                tasks=config.tasks, cache_hit=pending.cache_hit,
+                predicted_s=predicted_s, measured_s=measured_s,
+                rel_error=rel,
+                refined=refined, source=entry.source,
+                inflight=pending.inflight, load_factor=load,
+                measured_norm_s=measured_norm_s,
+                t_enqueue_s=req.arrival_s, t_decide_s=pending.t_decide_s,
+                t_dispatch_s=pending.t_dispatch_s, t_retire_s=t_retire,
+                latency_s=latency, deadline_s=req.deadline_s,
+                slo_violation=slo_violation,
+                queue_depth=pending.queue_depth,
+                trace_id=req.trace_id)
+            self.telemetry.append(sample)
 
         self.stats["requests"] += 1
         self.stats["cache_hits" if pending.cache_hit else "cold_misses"] += 1
+        self._m_requests.inc()
+        ns = (ctx.namespace or "shared") if ctx is not None else "shared"
+        self.metrics.counter(
+            "serving.cache.hit" if pending.cache_hit
+            else "serving.cache.miss", namespace=ns).inc()
         if slo_violation:
             self.stats["slo_violations"] += 1
+            self._m_slo_violations.inc()
         self.stats[f"tenant.{req.tenant}.served"] += 1
         ctx.served += 1
+        self._m_stage["retire"].observe(self.clock.now() - t_stage0)
 
         return RequestResult(
             request=req, config=config,
@@ -451,13 +526,19 @@ class AdaptiveScheduler:
         refines inline; the engine overrides this to DEFER the
         re-profiling to its next pool-quiesce point, so refinement
         measurements — like all profiling — happen on an idle pool."""
-        refinement = self.refiner.refine(
-            pending.runner, key, self._feats.get(key), entry,
-            model=ctx.fork_for_refit())
+        with self.tracer.span("refine", trace_id=pending.req.trace_id,
+                              key=key):
+            refinement = self.refiner.refine(
+                pending.runner, key, self._feats.get(key), entry,
+                model=ctx.fork_for_refit())
         self._t_single[key] = refinement.t_single_s
         self.stats["refinements"] += 1
         self.stats[f"tenant.{pending.req.tenant}.refinements"] += 1
         ctx.refinements += 1
+        self._m_refinements.inc()
+        self._m_stage["refine"].observe(refinement.seconds)
+        self.metrics.histogram(
+            "serving.refit.seconds").observe(refinement.seconds)
 
     def _predicted_runtime(self, key: str,
                            entry: TuneResult) -> Optional[float]:
@@ -492,6 +573,13 @@ class AdaptiveScheduler:
         JSONL so a mid-trace shutdown never leaves a truncated last line
         for CI artifact uploads.  Idempotent; the engine extends this
         with its worker-pool shutdown."""
+        if self.metrics.enabled:
+            # fires-vs-suppressions: the suppression half only settles at
+            # teardown (per-tenant detectors accumulate independently)
+            suppressed = self.drift.suppressed + sum(
+                ctx.drift.suppressed for ctx in self.tenancy
+                if ctx.drift is not self.drift)
+            self.metrics.gauge("serving.drift.suppressed").set(suppressed)
         self.telemetry.close()
 
     def __enter__(self) -> "AdaptiveScheduler":

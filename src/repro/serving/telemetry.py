@@ -66,6 +66,10 @@ class TelemetrySample:
     slo_violation: bool = False
     #: queue length observed at decision time
     queue_depth: int = 0
+    #: queue-assigned request trace id — the span-tracing correlation
+    #: key (repro.serving.observability); stable across out-of-order
+    #: retirement in the concurrent engine
+    trace_id: Optional[str] = None
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
@@ -76,12 +80,28 @@ class TelemetrySample:
         return TelemetrySample(**{k: v for k, v in d.items() if k in fields})
 
 
+class EmptyWindowError(ValueError):
+    """A statistic was requested over zero samples.
+
+    The one typed signal for "there is nothing to aggregate":
+    :func:`percentile` raises it on an empty window; the higher-level
+    aggregators (:func:`latency_stats`, :meth:`TelemetryLog.summary`)
+    catch the condition and return ``None``-shaped results instead, so
+    a trace where admission control shed *every* request still renders
+    a summary rather than blowing up the report path."""
+
+
 def percentile(sorted_values, q: float) -> float:
     """Linear-interpolated percentile of an ascending-sorted sequence
     (``q`` in [0, 1]).  The one primitive the latency reports need —
-    avoids dragging numpy into the telemetry hot path."""
+    avoids dragging numpy into the telemetry hot path.  Raises
+    :class:`EmptyWindowError` on an empty window (callers that can see
+    empty windows should use :func:`latency_stats`, which maps the
+    condition to ``None``)."""
     if not sorted_values:
-        raise ValueError("percentile of an empty sequence")
+        raise EmptyWindowError(
+            "percentile over an empty window: no samples to aggregate "
+            "(did a queue policy shed every request?)")
     if len(sorted_values) == 1:
         return float(sorted_values[0])
     pos = q * (len(sorted_values) - 1)
@@ -92,8 +112,10 @@ def percentile(sorted_values, q: float) -> float:
 
 
 def latency_stats(latencies) -> Optional[dict]:
-    """p50/p95/p99 + mean/max over a sequence of latency seconds; None
-    when the sequence is empty (e.g. a trace where nothing retired)."""
+    """p50/p95/p99 + mean/max over a sequence of latency seconds;
+    ``None`` when the sequence is empty (e.g. a trace where nothing
+    retired) — the consistent empty-window contract: aggregators return
+    ``None``, only the raw :func:`percentile` primitive raises."""
     lats = sorted(latencies)
     if not lats:
         return None
@@ -177,7 +199,12 @@ class TelemetryLog:
         return out
 
     def summary(self) -> dict:
-        """Aggregate view for dashboards / the --serve benchmark JSON."""
+        """Aggregate view for dashboards / the --serve benchmark JSON.
+
+        Total on an empty log (e.g. a deadline policy shed the entire
+        trace, so nothing ever retired): every ratio/stat field comes
+        back ``None`` or zero rather than raising — asserted by the
+        observability tests."""
         n = len(self.samples)
         hits = sum(s.cache_hit for s in self.samples)
         errs = [s.rel_error for s in self.samples if s.rel_error is not None]

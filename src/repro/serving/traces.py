@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.autotuner import TuningCache
 from repro.core.workloads import get_workload, list_workloads
 from repro.serving.clock import VirtualClock
+from repro.serving.observability import NULL_METRICS, NULL_TRACER
 from repro.serving.queue import POLICIES, RequestQueue, WorkloadRequest
 from repro.serving.refinement import DriftDetector, contention_factor
 from repro.serving.telemetry import (TelemetryLog, TelemetrySample,
@@ -305,7 +306,8 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
                    service: Optional[ServiceModel] = None,
                    seed: int = 0, contention_sigma: float = 0.12,
                    drift_injections: Iterable[tuple] = (),
-                   telemetry: Optional[TelemetryLog] = None) -> dict:
+                   telemetry: Optional[TelemetryLog] = None,
+                   tracer=None, metrics=None) -> dict:
     """Replay ``trace`` under ``policy`` on a virtual clock; return the
     tail-latency / SLO / queue-depth / drift report.
 
@@ -324,11 +326,29 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
     ``t_s``.  Pass ``telemetry`` to additionally record one full
     :class:`TelemetrySample` per retired request (keep it off for
     million-request runs; the report aggregates streamingly).
+
+    ``tracer`` / ``metrics`` are the same observability objects the real
+    schedulers take (:mod:`repro.serving.observability`): the tracer is
+    bound to the harness's virtual clock and records one span per stage
+    on the virtual timeline (warm decisions as ``decide``, cold ones as
+    ``tune.cold``, plus ``dispatch`` / ``retire`` / ``refine``); the
+    metrics registry counts the same families the schedulers do, so a
+    seeded replay's ``snapshot()`` is deterministic.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
     clock = VirtualClock()
-    queue = RequestQueue(policy, clock=clock)
+    tracer = tracer if tracer is not None else NULL_TRACER
+    if tracer.enabled and tracer.clock is None:
+        tracer.clock = clock
+    metrics = metrics if metrics is not None else NULL_METRICS
+    m_requests = metrics.counter("serving.requests")
+    m_hit = metrics.counter("serving.cache.hit", namespace="shared")
+    m_miss = metrics.counter("serving.cache.miss", namespace="shared")
+    m_drift = metrics.counter("serving.drift.fired")
+    m_refine = metrics.counter("serving.refinements")
+    m_slo = metrics.counter("serving.slo.violations")
+    queue = RequestQueue(policy, clock=clock, metrics=metrics)
     drift = drift if drift is not None else DriftDetector(load_discount=0.5)
     service = service if service is not None else ServiceModel(seed)
     z_svc = _NoiseStream([seed, 1])
@@ -399,6 +419,14 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
                         load=load, occupancy=occupancy,
                         t_decide_s=t_decide, t_dispatch_s=busy_until,
                         queue_depth=len(queue))
+        if tracer.enabled:
+            # the coordinator timeline is track 0; execution slots land
+            # on tracks 1..window (occupancy approximates the slot)
+            tracer.record("decide" if cache_hit else "tune.cold",
+                          t_decide, busy_until,
+                          trace_id=req.trace_id, tid=0)
+            tracer.record("dispatch", busy_until, busy_until + wall,
+                          trace_id=req.trace_id, tid=occupancy)
         heapq.heappush(completions, (busy_until + wall, req.seq, sim))
 
     def retire(sim: _Inflight) -> None:
@@ -418,6 +446,11 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
             refined_keys.append(sim.key)
             busy_until = max(busy_until, t_ret) + refine_s
             refined = True
+            m_drift.inc()
+            m_refine.inc()
+            if tracer.enabled:
+                tracer.record("refine", busy_until - refine_s, busy_until,
+                              trace_id=req.trace_id, tid=0)
             # the engine runs refinements at pool-quiesce points, so no
             # request decided against the stale entry retires *after*
             # the refresh — mirror that by repointing still-inflight
@@ -435,6 +468,12 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
         viol = req.deadline_s is not None and t_ret > req.deadline_s
         if viol:
             violations += 1
+            m_slo.inc()
+        m_requests.inc()
+        (m_hit if sim.cache_hit else m_miss).inc()
+        if tracer.enabled:
+            tracer.record("retire", t_ret, t_ret,
+                          trace_id=req.trace_id, tid=0)
         if telemetry is not None:
             telemetry.append(TelemetrySample(
                 seq=req.seq, tenant=req.tenant, workload=req.workload,
@@ -446,7 +485,8 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
                 measured_norm_s=norm, t_enqueue_s=req.arrival_s,
                 t_decide_s=sim.t_decide_s, t_dispatch_s=sim.t_dispatch_s,
                 t_retire_s=t_ret, latency_s=lat, deadline_s=req.deadline_s,
-                slo_violation=viol, queue_depth=sim.queue_depth))
+                slo_violation=viol, queue_depth=sim.queue_depth,
+                trace_id=req.trace_id))
 
     it = iter(trace)
     next_req = next(it, None)
@@ -477,6 +517,8 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
                 break  # deadline policy shed everything poppable
 
     shed = len(queue.shed)
+    if metrics.enabled:
+        metrics.gauge("serving.drift.suppressed").set(drift.suppressed)
     depths = sorted(depth_hist)
     total_d = sum(depth_hist.values())
     depth_mean = (sum(d * c for d, c in depth_hist.items()) / total_d

@@ -1,0 +1,363 @@
+"""End-to-end observability: span tracing, the metrics registry, and
+hot-path profiling (repro.serving.observability).
+
+Covers the PR's acceptance bars: spans nest correctly under a virtual
+clock, trace IDs survive the concurrent engine's out-of-order
+retirement, two seeded replays produce byte-identical metrics
+snapshots, the Chrome export is valid trace-event JSON, the disabled
+path is a shared no-op singleton (zero per-call allocation), the
+empty-window telemetry contract (typed raise at the primitive, None at
+the aggregators), and one-clock plumbing across queue / scheduler /
+refiner / tracer."""
+import json
+
+import pytest
+
+from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
+                           NULL_METRICS, NULL_TRACER, MetricsRegistry,
+                           OverlapHeuristicModel, TelemetryLog, Tracer,
+                           aggregate_stage_times, make_trace)
+from repro.serving.clock import VirtualClock
+from repro.serving.observability.metrics import (_NULL_INSTRUMENT,
+                                                 Histogram)
+from repro.serving.observability.tracing import _NULL_SPAN, stage_of
+from repro.serving.telemetry import (EmptyWindowError, TelemetrySample,
+                                     latency_stats, percentile)
+from repro.serving.traces import TraceConfig, generate_trace, \
+    simulate_trace
+
+
+def _sched(model=None, **kw):
+    kw.setdefault("telemetry", TelemetryLog())
+    kw.setdefault("keep_outputs", False)
+    return AdaptiveScheduler(model or OverlapHeuristicModel(), **kw)
+
+
+# -- span tracing ------------------------------------------------------------
+
+
+def test_spans_nest_under_virtual_clock():
+    clock = VirtualClock()
+    tr = Tracer(clock)
+    with tr.span("retire", trace_id="r000000"):
+        clock.advance(1.0)
+        with tr.span("refine", trace_id="r000000", key="k"):
+            clock.advance(2.0)
+        clock.advance(0.5)
+    inner, outer = tr.spans        # exit order: inner closes first
+    assert inner.name == "refine" and outer.name == "retire"
+    assert inner.parent == "retire" and inner.depth == 1
+    assert outer.parent is None and outer.depth == 0
+    assert inner.t_start == 1.0 and inner.t_end == 3.0
+    assert outer.t_start == 0.0 and outer.t_end == 3.5
+    assert inner.duration_s == pytest.approx(2.0)
+    assert inner.attrs == {"key": "k"}
+
+
+def test_stage_of_rollup():
+    assert stage_of("tune.cold.batch") == "tune"
+    assert stage_of("decide") == "decide"
+    assert stage_of("custom") == "custom"
+
+
+def test_aggregate_skips_nested_spans():
+    tr = Tracer(VirtualClock())
+    tr.record("retire", 0.0, 3.0, trace_id="a")
+    tr.record("refine", 1.0, 2.0, trace_id="a")       # depth 0 by record
+    with tr.span("decide"):
+        with tr.span("tune.cold"):                    # depth 1: excluded
+            pass
+    agg = aggregate_stage_times(tr.spans)
+    assert agg["retire"]["wall_s"] == pytest.approx(3.0)
+    assert agg["refine"]["count"] == 1
+    assert agg["tune"]["count"] == 0                  # nested, skipped
+    assert agg["dispatch"] == {"wall_s": 0.0, "count": 0, "mean_s": None}
+
+
+def test_trace_ids_survive_out_of_order_retirement():
+    tr = Tracer()
+    sched = ConcurrentScheduler(
+        OverlapHeuristicModel(), window=3, tracer=tr,
+        telemetry=TelemetryLog(), keep_outputs=False)
+    trace = make_trace(["vecadd", "dotprod"], occurrences=3)
+    with sched:
+        submitted = [sched.submit(r).trace_id for r in trace]
+        results = sched.run()
+    assert submitted == [f"r{i:06d}" for i in range(len(trace))]
+    # every result's telemetry sample carries its OWN request's id, even
+    # though the engine retires buckets out of order
+    for r in results:
+        assert r.sample.trace_id == r.request.trace_id
+    assert {s.trace_id for s in sched.telemetry} == set(submitted)
+    # spans correlate by the same ids
+    span_ids = {s.trace_id for s in tr.spans if s.trace_id}
+    assert span_ids == set(submitted)
+
+
+def test_chrome_export_is_valid_trace_event_json(tmp_path):
+    clock = VirtualClock()
+    tr = Tracer(clock)
+    with tr.span("decide", trace_id="r000000", tenant="acme"):
+        clock.advance(0.25)
+    tr.record("dispatch", 0.25, 0.75, trace_id="r000000", tid=1)
+    path = tmp_path / "trace.json"
+    assert tr.export_chrome(str(path)) == 2
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    xs = [e for e in events if e["ph"] == "X"]
+    assert len(xs) == 2
+    for e in xs:
+        assert set(e) >= {"name", "cat", "ph", "ts", "dur", "pid", "tid"}
+        assert e["ts"] >= 0 and e["dur"] >= 0         # rebased, us
+    assert xs[0]["args"]["trace_id"] == "r000000"
+    assert {e["tid"] for e in xs} == {0, 1}
+    # metadata record names the process for the Perfetto track header
+    assert events[0]["ph"] == "M"
+
+
+def test_jsonl_export_roundtrip(tmp_path):
+    tr = Tracer(VirtualClock())
+    tr.record("retire", 1.0, 2.0, trace_id="r000003", load=1.5)
+    path = tmp_path / "spans.jsonl"
+    assert tr.export_jsonl(str(path)) == 1
+    d = json.loads(path.read_text().strip())
+    assert d == {"name": "retire", "t_start": 1.0, "t_end": 2.0,
+                 "tid": 0, "trace_id": "r000003",
+                 "attrs": {"load": 1.5}}
+
+
+def test_null_tracer_is_shared_noop():
+    # the hot-path contract: one shared span object, nothing recorded,
+    # no clock reads — schedulers built without a tracer pay ~nothing
+    s1 = NULL_TRACER.span("decide", trace_id="r000000", tenant="a")
+    s2 = NULL_TRACER.span("dispatch")
+    assert s1 is s2 is _NULL_SPAN
+    with s1:
+        pass
+    NULL_TRACER.record("retire", 0.0, 1.0)
+    assert len(NULL_TRACER) == 0 and NULL_TRACER.spans == []
+    assert not NULL_TRACER.enabled
+
+
+def test_scheduler_never_mutates_null_singletons():
+    sched = _sched(clock=VirtualClock())
+    assert sched.tracer is NULL_TRACER
+    assert sched.metrics is NULL_METRICS
+    assert NULL_TRACER.clock is None       # bind-my-clock must not leak
+
+
+# -- metrics registry --------------------------------------------------------
+
+
+def test_null_metrics_shared_instrument():
+    c = NULL_METRICS.counter("serving.requests")
+    g = NULL_METRICS.gauge("serving.queue.depth", tenant="acme")
+    h = NULL_METRICS.histogram("serving.stage.decide.seconds")
+    assert c is g is h is _NULL_INSTRUMENT
+    c.inc(); g.set(3); h.observe(0.1)      # all no-ops
+    assert NULL_METRICS.snapshot() == {}
+    assert not NULL_METRICS.enabled
+
+
+def test_registry_get_or_create_and_kind_confusion():
+    m = MetricsRegistry()
+    a = m.counter("serving.requests")
+    assert m.counter("serving.requests") is a
+    b = m.counter("serving.cache.hit", namespace="acme")
+    assert m.counter("serving.cache.hit", namespace="globex") is not b
+    with pytest.raises(TypeError):
+        m.gauge("serving.requests")
+
+
+def test_histogram_buckets_and_stats():
+    h = Histogram(buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    snap = h.snapshot()
+    assert snap["count"] == 4
+    assert snap["sum"] == pytest.approx(5.555)
+    assert snap["min"] == 0.005 and snap["max"] == 5.0
+    assert snap["buckets"] == {"0.01": 1, "0.1": 1, "1.0": 1, "+Inf": 1}
+
+
+def test_prometheus_text_format():
+    m = MetricsRegistry()
+    m.counter("serving.requests").inc(3)
+    m.counter("serving.cache.hit", namespace="acme").inc()
+    m.histogram("serving.stage.decide.seconds",
+                buckets=(0.1, 1.0)).observe(0.05)
+    text = m.to_prometheus()
+    assert "# TYPE serving_requests counter" in text
+    assert "serving_requests 3" in text
+    assert 'serving_cache_hit{namespace="acme"} 1' in text
+    # histogram series: cumulative buckets + sum + count
+    assert 'serving_stage_decide_seconds_bucket{le="0.1"} 1' in text
+    assert 'serving_stage_decide_seconds_bucket{le="+Inf"} 1' in text
+    assert "serving_stage_decide_seconds_count 1" in text
+
+
+def test_metrics_snapshot_deterministic_across_replays():
+    def run():
+        m = MetricsRegistry()
+        tr = Tracer()
+        cfg = TraceConfig(n_requests=400, seed=7,
+                          workloads=("vecadd", "dotprod"),
+                          arrival="bursty")
+        report = simulate_trace(generate_trace(cfg), policy="deadline",
+                                seed=7, tracer=tr, metrics=m)
+        return report, m.snapshot(), [s.to_json() for s in tr.spans]
+
+    r1, snap1, spans1 = run()
+    r2, snap2, spans2 = run()
+    assert snap1 == snap2
+    assert spans1 == spans2
+    assert snap1["serving.requests"]["values"][0]["value"] \
+        == r1["completed"]
+    assert snap1["serving.queue.shed"]["values"][0]["value"] == r1["shed"]
+    hit = snap1["serving.cache.hit"]["values"][0]["value"]
+    miss = snap1["serving.cache.miss"]["values"][0]["value"]
+    assert hit + miss == r1["completed"]
+    assert miss == r1["cold_misses"]
+
+
+def test_sim_spans_cover_stages_and_clock_is_virtual():
+    tr = Tracer()
+    cfg = TraceConfig(n_requests=50, seed=1, workloads=("vecadd",),
+                      slo_choices=None)
+    simulate_trace(generate_trace(cfg), policy="fifo", tracer=tr)
+    names = {stage_of(s.name) for s in tr.spans}
+    assert {"decide", "tune", "dispatch", "retire"} <= names
+    # virtual timeline: all stamps inside the trace's virtual horizon,
+    # far below any perf_counter reading
+    assert all(0.0 <= s.t_start <= s.t_end < 1e4 for s in tr.spans)
+
+
+# -- telemetry empty-window contract -----------------------------------------
+
+
+def test_percentile_empty_raises_typed():
+    with pytest.raises(EmptyWindowError) as ei:
+        percentile([], 0.5)
+    assert "empty window" in str(ei.value)
+    assert isinstance(ei.value, ValueError)     # back-compat catch sites
+
+
+def test_latency_stats_and_summary_empty_return_none():
+    assert latency_stats([]) is None
+    s = TelemetryLog().summary()                # nothing ever retired
+    assert s["requests"] == 0
+    assert s["latency"] is None
+    assert s["hit_rate"] == 0.0
+    assert s["slo_violation_rate"] is None
+    assert s["mean_rel_error"] is None
+    assert s["per_tenant"] == {}
+
+
+def test_summary_when_every_request_shed():
+    # deadline queue sheds the whole trace -> zero samples, but both the
+    # scheduler summary path and the sim report must still render
+    clock = VirtualClock()
+    sched = _sched(policy="deadline", clock=clock)
+    trace = make_trace(["vecadd"], occurrences=2)
+    for req in trace:
+        req.deadline_s = -1.0                   # expired before submit
+    sched.submit_all(trace)
+    assert sched.run() == []
+    assert len(sched.queue.shed) == len(trace)
+    s = sched.telemetry.summary()
+    assert s["requests"] == 0 and s["latency"] is None
+
+
+# -- one clock everywhere ----------------------------------------------------
+
+
+def test_clock_plumbed_to_every_component():
+    clock = VirtualClock()
+    tr = Tracer()
+    sched = _sched(clock=clock, tracer=tr, metrics=MetricsRegistry())
+    assert sched.clock is clock
+    assert sched.queue.clock is clock
+    assert sched.refiner.clock is clock
+    assert sched.tracer.clock is clock
+
+
+def test_explicit_tracer_clock_is_respected():
+    mine = VirtualClock()
+    tr = Tracer(mine)
+    sched = _sched(tracer=tr)
+    assert tr.clock is mine                     # not rebound
+
+
+# -- live schedulers: spans + metrics on the real path -----------------------
+
+
+def test_serial_scheduler_metrics_and_spans_consistent():
+    tr = Tracer()
+    m = MetricsRegistry()
+    sched = _sched(tracer=tr, metrics=m)
+    with sched:
+        sched.submit_all(make_trace(["vecadd", "dotprod"], occurrences=2))
+        results = sched.run()
+    n = len(results)
+    snap = m.snapshot()
+
+    def val(name):
+        return snap[name]["values"][0]["value"]
+
+    assert val("serving.requests") == n
+    hits = sum(e["value"] for e in snap["serving.cache.hit"]["values"])
+    misses = sum(e["value"] for e in snap["serving.cache.miss"]["values"])
+    assert hits + misses == n
+    assert misses == sum(not r.cache_hit for r in results)
+    assert val("serving.model.searches") == sched.stats["model_searches"]
+    for stage in ("decide", "dispatch", "retire"):
+        assert val(f"serving.stage.{stage}.seconds")["count"] == n
+    # one top-level decide/dispatch/retire span per request
+    by_stage = aggregate_stage_times(tr.spans)
+    assert by_stage["decide"]["count"] == n
+    assert by_stage["dispatch"]["count"] == n
+    assert by_stage["retire"]["count"] == n
+    # telemetry carries the queue-assigned ids
+    assert all(s.trace_id is not None for s in sched.telemetry)
+
+
+def test_engine_batched_tune_records_batch_size():
+    m = MetricsRegistry()
+    sched = ConcurrentScheduler(
+        OverlapHeuristicModel(), window=4, metrics=m,
+        telemetry=TelemetryLog(), keep_outputs=False)
+    with sched:
+        sched.submit_all(make_trace(["vecadd", "dotprod", "mvmult"],
+                                    occurrences=1))
+        sched.run()
+    snap = m.snapshot()
+    batch = snap["serving.cold_batch.size"]["values"][0]["value"]
+    assert batch["count"] >= 1
+    assert batch["max"] >= 2                   # >=2 cold buckets batched
+
+
+# -- stats CLI ---------------------------------------------------------------
+
+
+def test_stats_render_smoke():
+    from repro.launch.stats import render
+    samples = [TelemetrySample(
+        seq=i, tenant="acme", workload="vecadd", key="k",
+        backend="host-sync", partitions=1, tasks=2, cache_hit=i > 0,
+        predicted_s=1e-3, measured_s=1.1e-3, rel_error=0.1,
+        latency_s=2e-3, trace_id=f"r{i:06d}") for i in range(3)]
+    m = MetricsRegistry()
+    m.counter("serving.requests").inc(3)
+    m.histogram("serving.stage.decide.seconds").observe(1e-4)
+    out = render(samples, m.snapshot())
+    assert "requests 3" in out
+    assert "hit_rate 0.67" in out
+    assert "p95" in out
+    assert "serving.requests" in out
+    assert "serving.stage.decide.seconds" in out
+
+
+def test_stats_render_empty_samples():
+    from repro.launch.stats import render
+    out = render([])
+    assert "no retired requests" in out
