@@ -3,7 +3,7 @@ JSON against the committed baseline and fail CI on a real regression.
 
     python benchmarks/check_regression.py FRESH BASELINE [--tolerance 0.25]
 
-Works on all five benchmark artifacts:
+Works on all six benchmark artifacts:
 
   BENCH_serving.json  (``--serve-concurrent``)  gated on
       ``capacity_fraction`` — the engine's speedup normalized by the SAME
@@ -29,6 +29,12 @@ Works on all five benchmark artifacts:
       (higher is better — EDF + shedding must keep beating FIFO).
       These numbers are deterministic given the seed (no wall clock in
       the loop), so even a tight tolerance is noise-free.
+  BENCH_resilience.json (``--serve-chaos``)     gated on
+      ``chaos_crashes`` (baseline 0 == exact-zero gate),
+      ``chaos_terminal_fraction``, ``chaos_failed_fraction`` and
+      ``chaos_slo_violation_delta`` from the fault-injected run of the
+      real engine under the committed schedule
+      (``benchmarks/data/chaos_faults.json``).
   BENCH_overhead.json (``--serve-real-trace``)  gated on
       ``python_overhead_fraction`` — coordinator decide+retire wall over
       total wall in the real-engine replay (lower is better).  A ratio
@@ -81,6 +87,22 @@ GATED_METRICS = {
         ("lower", "coordinator (decide+retire) wall over total wall in "
                   "the real-engine trace replay — same-run ratio, host "
                   "drift largely cancels"),
+    "chaos_crashes":
+        ("lower", "scheduler crashes under the committed fault schedule "
+                  "(baseline 0 == exact-zero gate: the resilience layer "
+                  "must NEVER let an injected fault kill the process)"),
+    "chaos_terminal_fraction":
+        ("higher", "requests reaching a terminal status (served / "
+                   "degraded / failed / timeout) under chaos — a lost "
+                   "request is a scheduler bug"),
+    "chaos_failed_fraction":
+        ("lower", "requests individually failed/timed out under chaos "
+                  "— deterministic given the committed fault windows"),
+    "chaos_slo_violation_delta":
+        ("lower", "SLO-violation rate added by the committed faults vs "
+                  "the same run fault-free; gate loosely (thread-timing "
+                  "noise), it exists to catch retry storms and "
+                  "unrecovered breakers"),
 }
 
 # context printed next to the verdict but never gated (absolute numbers

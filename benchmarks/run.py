@@ -37,7 +37,7 @@ sys.path.insert(0, os.path.join(ROOT, "src"))
 # client, hence before the imports below; applies to BOTH engines, so it
 # is a deployment mode, not a thumb on the scale.
 if ("--serve-concurrent" in sys.argv or "--serve-oracle" in sys.argv
-        or "--serve-real-trace" in sys.argv):
+        or "--serve-real-trace" in sys.argv or "--serve-chaos" in sys.argv):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                                + " --xla_cpu_multi_thread_eigen=false"
                                  " intra_op_parallelism_threads=1")
@@ -759,6 +759,207 @@ def serve_real_trace(*, n_requests: int = 10_000, seed: int = 0,
     return rows
 
 
+DEFAULT_FAULT_SCHEDULE = os.path.join(ROOT, "benchmarks", "data",
+                                      "chaos_faults.json")
+
+
+def serve_chaos(*, n_requests: int = 400, seed: int = 0, window: int = 8,
+                workers: int | None = None, scale_index: int = 0,
+                backend: str = "host-threads",
+                fault_schedule: str = DEFAULT_FAULT_SCHEDULE,
+                watchdog_s: float = 0.25, slo_margin: float = 2.0,
+                slo_floor_s: float = 0.25,
+                json_path: str = "BENCH_resilience.json") -> list[str]:
+    """Chaos benchmark: the PR 6 bursty trace through the REAL concurrent
+    engine twice — fault-free, then under the committed fault schedule —
+    with the resilience layer live in both runs.
+
+    Measures what the fault-tolerance layer actually buys (ROADMAP's
+    robustness item): the chaos run must complete with **zero scheduler
+    crashes** and every request terminal (served / degraded / failed /
+    timeout — never lost), and the report splits *degraded* (answered
+    via a fallback rung) from *failed* so graceful degradation is
+    distinguishable from dropped work.
+
+    SLO accounting: request ``i``'s deadline is
+    ``slo_floor_s + slo_margin * (its own fault-free latency)`` — a
+    per-request yardstick from the baseline run, so the fault-free
+    violation rate is 0 by construction and
+    ``chaos_slo_violation_delta`` *is* the latency damage the faults
+    caused (gated; the committed schedule bounds how much a retry storm
+    or breaker window may cost).  Breaker open→closed transitions give
+    ``mean_recovery_s``.
+
+    Gated in ``BENCH_resilience.json``: ``chaos_crashes`` (exact-zero),
+    ``chaos_terminal_fraction`` (higher), ``chaos_failed_fraction``
+    (lower), ``chaos_slo_violation_delta`` (lower).
+    """
+    import collections
+
+    from repro.serving import (BreakerConfig, ConcurrentScheduler,
+                               DriftDetector, FaultPlan, MetricsRegistry,
+                               OverlapHeuristicModel, ResiliencePolicy,
+                               TelemetryLog)
+    from repro.serving.traces import TraceConfig, generate_trace
+
+    workers = workers or max(2, min(window, os.cpu_count() or 2))
+    # two scales + a churn trickle: the nearest-bucket rung needs a
+    # neighboring shape bucket in the cache to borrow from
+    cfg = TraceConfig(
+        n_requests=n_requests, seed=seed, arrival="bursty",
+        workloads=tuple(REAL_TRACE_PROGRAMS),
+        scale_indices=(scale_index, scale_index + 1), churn_prob=0.05,
+        slo_choices=None)
+    # breaker cooldown scaled to the run: the committed outage window
+    # spans a few hundred ms of wall, and recovery (open -> half-open
+    # probe -> closed) must happen INSIDE the measured run
+    policy = ResiliencePolicy(
+        breaker=BreakerConfig(k=3, cooldown_s=0.3), watchdog_s=watchdog_s)
+
+    def run_once(faults, deadline_offsets):
+        # fresh requests every run: the engine mutates arrival stamps
+        reqs = list(generate_trace(cfg))
+        for r in reqs:
+            r.arrival_s = None
+            r.deadline_s = None
+        metrics = MetricsRegistry()
+        sched = ConcurrentScheduler(
+            OverlapHeuristicModel(), window=window, workers=workers,
+            backend=backend, drift=DriftDetector(threshold=1e9),
+            telemetry=TelemetryLog(), keep_outputs=False,
+            metrics=metrics, faults=faults, resilience=policy)
+        with sched:
+            sched.submit_all(reqs)      # stamps arrival_s on the real clock
+            if deadline_offsets is not None:
+                for r, off in zip(reqs, deadline_offsets):
+                    r.deadline_s = r.arrival_s + off
+            t0 = time.perf_counter()
+            results = sched.run()
+            wall = time.perf_counter() - t0
+        return sched, metrics, results, wall
+
+    rows = []
+
+    # -- jit warmup: first-compile walls (100s of ms) would otherwise
+    # read as watchdog timeouts and poison the per-request SLO yardstick
+    run_once(None, None)
+
+    # -- baseline: resilience live, no faults --------------------------------
+    _, _, base_results, base_wall = run_once(None, None)
+    base_lat = [r.sample.latency_s for r in base_results]
+    offsets = [slo_floor_s + slo_margin * (lat if lat is not None else 0.0)
+               for lat in base_lat]
+    base_viol = sum(1 for lat, off in zip(base_lat, offsets)
+                    if lat is None or lat > off)
+    base_rate = base_viol / max(len(base_results), 1)
+    rows.append(f"serve_chaos.baseline,"
+                f"{base_wall / max(len(base_results), 1) * 1e6:.0f},"
+                f"requests={len(base_results)},wall_s={base_wall:.2f},"
+                f"slo_violation_rate={base_rate:.4f}")
+
+    # -- chaos: same engine, same policy, committed fault schedule -----------
+    faults = FaultPlan.load(fault_schedule)
+    crashes = 0
+    try:
+        sched, metrics, results, wall = run_once(faults, offsets)
+    except BaseException as e:  # noqa: BLE001 — a crash IS the measurement
+        crashes = 1
+        rows.append(f"serve_chaos.CRASH,0,error={type(e).__name__}: {e}")
+        sched = metrics = None
+        results, wall = [], 0.0
+
+    statuses = collections.Counter(r.status for r in results)
+    n_terminal = len(results)
+    terminal_fraction = n_terminal / max(n_requests, 1)
+    failed = statuses["failed"] + statuses["timeout"]
+    failed_fraction = failed / max(n_requests, 1)
+    degraded_fraction = statuses["degraded"] / max(n_requests, 1)
+    chaos_viol = sum(
+        1 for r in results
+        if r.status in ("failed", "timeout") or (
+            r.sample.latency_s is not None
+            and r.sample.deadline_s is not None
+            and r.sample.t_retire_s is not None
+            and r.sample.t_retire_s > r.sample.deadline_s))
+    chaos_rate = chaos_viol / max(n_terminal, 1)
+    slo_delta = max(0.0, chaos_rate - base_rate)
+
+    recoveries = []
+    if sched is not None:
+        opened_at: dict = {}
+        for t, key, state in sched.breaker.events:
+            if state == "open":
+                opened_at.setdefault(key, t)
+            elif state == "closed" and key in opened_at:
+                recoveries.append(t - opened_at.pop(key))
+    mean_recovery_s = (sum(recoveries) / len(recoveries)
+                       if recoveries else None)
+
+    stats = dict(sched.stats) if sched is not None else {}
+
+    def counter_total(name):
+        snap = metrics.snapshot() if metrics is not None else {}
+        return sum(v["value"] for v in snap.get(name, {}).get("values", []))
+
+    recovered = counter_total("serving.faults.recovered")
+    rows.append(f"serve_chaos.window{window}.{backend},"
+                f"{wall / max(n_terminal, 1) * 1e6:.0f},"
+                f"requests={n_terminal}/{n_requests},wall_s={wall:.2f},"
+                f"crashes={crashes},"
+                f"faults_injected={faults.fired}")
+    rows.append(f"serve_chaos.outcomes,0,"
+                f"served={statuses['served']},"
+                f"degraded={statuses['degraded']},"
+                f"failed={statuses['failed']},"
+                f"timeout={statuses['timeout']},"
+                f"recovered={recovered},"
+                f"watchdog_fired={stats.get('watchdog_fired', 0)}")
+    rows.append(f"serve_chaos.slo,0,"
+                f"base_rate={base_rate:.4f},chaos_rate={chaos_rate:.4f},"
+                f"delta={slo_delta:.4f},"
+                f"breaker_recoveries={len(recoveries)},"
+                f"mean_recovery_s="
+                f"{mean_recovery_s if mean_recovery_s is None else round(mean_recovery_s, 3)}")
+
+    payload = {
+        "programs": REAL_TRACE_PROGRAMS,
+        "n_requests": n_requests,
+        "seed": seed,
+        "backend": backend,
+        "window": window,
+        "workers": workers,
+        "scale_index": scale_index,
+        "watchdog_s": watchdog_s,
+        "fault_schedule": os.path.relpath(fault_schedule, ROOT),
+        "fault_plan": faults.to_json(),
+        "faults_injected": faults.fired,
+        "cpu_count": os.cpu_count(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "baseline_wall_s": base_wall,
+        "chaos_wall_s": wall,
+        "statuses": dict(statuses),
+        "stats": stats,
+        "chaos_crashes": crashes,
+        "chaos_recovered": recovered,
+        "chaos_terminal_fraction": terminal_fraction,
+        "chaos_failed_fraction": failed_fraction,
+        "chaos_degraded_fraction": degraded_fraction,
+        "base_slo_violation_rate": base_rate,
+        "chaos_slo_violation_rate": chaos_rate,
+        "chaos_slo_violation_delta": slo_delta,
+        "breaker_recoveries": len(recoveries),
+        "mean_recovery_s": mean_recovery_s,
+        "metrics": metrics.snapshot() if metrics is not None else {},
+        "telemetry_summary": (sched.telemetry.summary()
+                              if sched is not None else None),
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(json_path)), exist_ok=True)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+    rows.append(f"# resilience JSON written to {json_path}")
+    return rows
+
+
 def model_eval(programs=None, *, datasets: int = 2, reps: int = 1,
                epochs: int = 600,
                json_path: str = "BENCH_model.json") -> list[str]:
@@ -831,7 +1032,7 @@ def dryrun_summary() -> list[str]:
         try:
             with open(path) as f:
                 d = json.load(f)
-        except Exception:
+        except (OSError, ValueError):
             continue
         if "roofline" not in d:
             continue
@@ -895,6 +1096,20 @@ def main() -> None:
     ap.add_argument("--metrics-out", default=None,
                     help="--serve-real-trace: save the metrics registry "
                          "snapshot JSON here")
+    ap.add_argument("--serve-chaos", action="store_true",
+                    help="fault-free vs fault-injected run of the real "
+                         "engine with the resilience layer live; writes "
+                         "BENCH_resilience.json")
+    ap.add_argument("--chaos-requests", type=int, default=400,
+                    help="requests per run for --serve-chaos")
+    ap.add_argument("--chaos-backend", default="host-threads",
+                    help="--serve-chaos primary backend (must differ "
+                         "from host-sync for the dispatch-fallback rung "
+                         "to be exercised)")
+    ap.add_argument("--fault-schedule", default=DEFAULT_FAULT_SCHEDULE,
+                    help="--serve-chaos: committed FaultPlan JSON")
+    ap.add_argument("--chaos-watchdog-ms", type=float, default=250.0,
+                    help="--serve-chaos execution watchdog (ms)")
     ap.add_argument("--serve-oracle", action="store_true",
                     help="long-trace oracle-regret benchmark (adaptive "
                          "steady state vs exhaustive per-workload "
@@ -938,6 +1153,18 @@ def main() -> None:
                 chrome_trace=args.chrome_trace,
                 metrics_out=args.metrics_out,
                 json_path=args.serve_json or "BENCH_overhead.json"):
+            print(row)
+        return
+
+    if args.serve_chaos:
+        print("name,us_per_call,derived")
+        for row in serve_chaos(
+                n_requests=args.chaos_requests, seed=args.trace_seed,
+                window=args.serve_window, workers=args.serve_workers,
+                backend=args.chaos_backend,
+                fault_schedule=args.fault_schedule,
+                watchdog_s=args.chaos_watchdog_ms / 1e3,
+                json_path=args.serve_json or "BENCH_resilience.json"):
             print(row)
         return
 

@@ -73,6 +73,24 @@ class TuneResult:
 # ---------------------------------------------------------------------------
 
 
+def quarantine_file(path) -> Optional[str]:
+    """Move a corrupt persisted file aside (``<path>.corrupt``,
+    ``.corrupt-1``, ...) so the caller can rebuild from empty while the
+    evidence survives for inspection.  Returns the quarantine path, or
+    None if the file vanished underneath us."""
+    path = str(path)
+    if not os.path.exists(path):
+        return None
+    n = 0
+    while True:
+        dest = f"{path}.corrupt" + (f"-{n}" if n else "")
+        if not os.path.exists(dest):
+            break
+        n += 1
+    os.replace(path, dest)
+    return dest
+
+
 def shape_bucket(n: int) -> int:
     """Round the leading (iteration-space) dim up to a power of two.
 
@@ -118,11 +136,21 @@ class TuningCache:
         self._entries: dict[str, TuneResult] = {}
         self.hits = 0
         self.misses = 0
+        #: path the corrupt file was moved to, if a load quarantined one
+        self.quarantined: Optional[str] = None
         if path and os.path.exists(path):
             try:
                 self.load(path)
-            except Exception as e:  # corrupt cache ==> cold start, not a crash
-                warnings.warn(f"ignoring unreadable tuning cache {path}: {e}")
+            except (OSError, ValueError, KeyError, TypeError) as e:
+                # corrupt/unreadable cache ==> quarantine-and-rebuild,
+                # not a crash: the damaged file moves aside (evidence
+                # survives; the next save() atomically writes a fresh
+                # one) and serving cold-starts
+                self._entries.clear()
+                self.quarantined = quarantine_file(path)
+                warnings.warn(
+                    f"unreadable tuning cache {path} ({e}); quarantined "
+                    f"to {self.quarantined} and rebuilding empty")
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -142,6 +170,11 @@ class TuningCache:
 
     def keys(self) -> list[str]:
         return list(self._entries)
+
+    def peek(self, key: str) -> Optional[TuneResult]:
+        """Raw lookup WITHOUT hit/miss accounting — for introspection
+        (the resilience layer's nearest-bucket scan), not serving."""
+        return self._entries.get(key)
 
     def get(self, key: str, *, valid=None) -> Optional[TuneResult]:
         """Stats-counted lookup; an entry failing the ``valid`` predicate
@@ -170,6 +203,8 @@ class TuningCache:
         with open(tmp, "w") as f:
             json.dump({k: r.to_json() for k, r in self._entries.items()},
                       f, indent=0)
+            f.flush()
+            os.fsync(f.fileno())   # crash-safe: rename lands AFTER the data
         os.replace(tmp, path)
         return path
 

@@ -24,6 +24,7 @@ import errno
 import os
 import re
 import shutil
+import warnings
 from pathlib import Path
 from typing import Optional
 
@@ -40,8 +41,11 @@ def default_model_dir() -> Path:
 
 
 class ModelRegistry:
-    def __init__(self, root: "str | Path | None" = None):
+    def __init__(self, root: "str | Path | None" = None, *, metrics=None):
         self.root = Path(root) if root else default_model_dir()
+        # duck-typed MetricsRegistry (kept optional so core never
+        # imports serving): counts dangling-latest fallbacks
+        self.metrics = metrics
 
     # -- enumeration ---------------------------------------------------------
 
@@ -54,6 +58,20 @@ class ModelRegistry:
         return sorted(p.name for p in self.root.iterdir()
                       if p.is_dir() and not p.name.startswith(".")
                       and is_artifact_dir(p))
+
+    def _fallback_for(self, dangling_id: str) -> Optional[str]:
+        """Newest resolvable artifact to stand in for a dangling
+        ``latest`` pointer: same lineage as the dangling id when any
+        version of it survives, else the lexically-newest artifact
+        overall (zero-padded ``v%03d`` makes lexical order = version
+        order).  None when the registry holds nothing resolvable."""
+        known = self.list()
+        if not known:
+            return None
+        stem = re.sub(r"-v\d+$", "", dangling_id)
+        same_lineage = [a for a in known
+                        if re.fullmatch(re.escape(stem) + r"-v\d+", a)]
+        return max(same_lineage) if same_lineage else max(known)
 
     def _next_version(self, kind: str, tenant: str) -> int:
         stem = "-".join(filter(None, [kind, tenant]))
@@ -141,12 +159,27 @@ class ModelRegistry:
                     f"(publish one with launch/train_model.py)")
             path = self.root / artifact_id
             if not is_artifact_dir(path):
-                # NOT FileNotFoundError: a dangling pointer is registry
-                # corruption, and serving's empty-registry bootstrap
-                # must not silently paper over it with a fresh model
-                raise RuntimeError(
+                # dangling pointer = registry corruption.  With other
+                # resolvable versions present, serving falls back to the
+                # newest one (same lineage preferred) with a warning —
+                # a deleted artifact must not take the fleet down.  With
+                # NOTHING resolvable left this stays a hard RuntimeError
+                # (NOT FileNotFoundError: the empty-registry bootstrap
+                # must not silently paper over corruption with a fresh
+                # model).
+                fallback = self._fallback_for(artifact_id)
+                if fallback is None:
+                    raise RuntimeError(
+                        f"registry {self.root}: 'latest' points at "
+                        f"{artifact_id!r} but no artifact exists there")
+                warnings.warn(
                     f"registry {self.root}: 'latest' points at "
-                    f"{artifact_id!r} but no artifact exists there")
+                    f"{artifact_id!r} which no longer exists; falling "
+                    f"back to newest resolvable version {fallback!r}")
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "serving.registry.latest_fallback").inc()
+                return self.root / fallback
             return path
         if is_artifact_dir(self.root / spec):
             return self.root / spec

@@ -16,7 +16,9 @@ def cost_analysis_dict(compiled) -> dict:
     """
     try:
         cost = compiled.cost_analysis()
-    except Exception:
+    # cost_analysis availability/shape is backend-specific; an
+    # unsupported backend means "no estimate", not a crash
+    except Exception:  # noqa: BLE001
         return {}
     if cost is None:
         return {}

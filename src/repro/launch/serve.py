@@ -121,7 +121,8 @@ DEFAULT_ADAPTIVE_WORKLOADS = ("vecadd", "dotprod", "mvmult")
 
 
 def resolve_serving_model(spec: str = "latest", model_dir=None, *,
-                          bootstrap: bool = True, verbose: bool = True):
+                          bootstrap: bool = True, verbose: bool = True,
+                          metrics=None):
     """Resolve ``--model`` to ``(model, info)``.
 
     ``spec`` is ``"latest"``, an artifact id, an artifact directory
@@ -132,6 +133,9 @@ def resolve_serving_model(spec: str = "latest", model_dir=None, *,
     profile cache makes repeats cheap).  ``info["artifact_id"]`` doubles
     as the scheduler's ``model_tag`` so tuning-cache entries are keyed
     by model version and a hot-swapped model never serves stale picks.
+    ``metrics`` (a MetricsRegistry) makes registry fallbacks — e.g. a
+    dangling ``latest`` pointer resolving to the newest surviving
+    version — countable instead of silent.
     """
     from repro.core.modeling import OverlapHeuristicModel
     from repro.core.modeling.registry import ModelRegistry
@@ -139,7 +143,7 @@ def resolve_serving_model(spec: str = "latest", model_dir=None, *,
     if spec == "heuristic":
         return OverlapHeuristicModel(), {
             "spec": spec, "kind": "heuristic", "artifact_id": "heuristic"}
-    registry = ModelRegistry(model_dir)
+    registry = ModelRegistry(model_dir, metrics=metrics)
     try:
         model, manifest = registry.load(spec)
     except FileNotFoundError:
@@ -179,6 +183,9 @@ def adaptive_serve(
     verbose: bool = True,
     trace_out: Optional[str] = None,
     metrics_out: Optional[str] = None,
+    resilience: bool = False,
+    watchdog_ms: Optional[float] = None,
+    fault_plan: Optional[str] = None,
 ) -> dict:
     """Serve ``n_requests`` of a mixed multi-tenant trace adaptively.
 
@@ -208,21 +215,55 @@ def adaptive_serve(
     ``.jsonl`` with the raw spans lands next to it.  ``metrics_out``
     switches the metrics registry on and saves its snapshot there;
     either flag also adds a ``metrics`` block to the returned summary.
-    """
-    from repro.core.autotuner import TuningCache
-    from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
-                               DriftDetector, MetricsRegistry,
-                               TelemetryLog, Tracer, make_trace)
 
-    serving_model, model_info = resolve_serving_model(
-        model, model_dir, verbose=verbose)
+    ``resilience=True`` (or a ``watchdog_ms`` / ``fault_plan``) arms the
+    fault-tolerance layer (README "Resilience"): deadline-aware retries,
+    the per-(tenant, stage) circuit breaker over the degradation ladder,
+    an execution watchdog, and individual request failure instead of
+    scheduler crashes — including falling back to the heuristic model
+    when the registry itself cannot be loaded.  ``fault_plan`` names a
+    :class:`~repro.serving.FaultPlan` JSON for deterministic injection.
+    """
+    import warnings
+
+    from repro.core.autotuner import TuningCache
+    from repro.core.modeling import OverlapHeuristicModel
+    from repro.serving import (AdaptiveScheduler, ConcurrentScheduler,
+                               DriftDetector, FaultPlan, MetricsRegistry,
+                               ResiliencePolicy, TelemetryLog, Tracer,
+                               make_trace)
+
+    faults = FaultPlan.load(fault_plan) if fault_plan else None
+    policy_obj = None
+    if resilience or watchdog_ms is not None or faults is not None:
+        policy_obj = ResiliencePolicy(
+            watchdog_s=watchdog_ms / 1e3 if watchdog_ms else None)
+
+    tracer = Tracer() if trace_out else None
+    metrics = MetricsRegistry() if (metrics_out or trace_out) else None
+    try:
+        if faults is not None and faults.enabled:
+            faults.bind(metrics=metrics)
+            faults.fire("registry.load")
+        serving_model, model_info = resolve_serving_model(
+            model, model_dir, verbose=verbose, metrics=metrics)
+    except Exception as e:  # noqa: BLE001 — top ladder rung
+        if policy_obj is None:
+            raise
+        # registry down ==> serve on the zero-training heuristic rather
+        # than refuse traffic (the top rung of the degradation ladder)
+        warnings.warn(f"serving model unavailable ({type(e).__name__}: "
+                      f"{e}); falling back to the heuristic model")
+        if metrics is not None:
+            metrics.counter("serving.faults.degraded").inc()
+        serving_model = OverlapHeuristicModel()
+        model_info = {"spec": model, "kind": "heuristic",
+                      "artifact_id": "heuristic-fallback"}
     occurrences = -(-n_requests // len(workloads))  # ceil
     trace = make_trace(list(workloads), occurrences=occurrences,
                        tenants=tenants if tenants > 0
                        else ("tenant-a", "tenant-b"),
                        seed=seed)[:n_requests]
-    tracer = Tracer() if trace_out else None
-    metrics = MetricsRegistry() if (metrics_out or trace_out) else None
     common = dict(
         backend=backend, policy=policy,
         cache=TuningCache(cache_path),
@@ -231,7 +272,8 @@ def adaptive_serve(
         isolate_tenants=tenants > 0,
         model_tag=model_info["artifact_id"],
         keep_outputs=False,
-        tracer=tracer, metrics=metrics)
+        tracer=tracer, metrics=metrics,
+        faults=faults, resilience=policy_obj)
     if window > 1:
         sched = ConcurrentScheduler(serving_model,
                                     window=window, workers=workers,
@@ -255,6 +297,11 @@ def adaptive_serve(
             # progress goes to stderr so `--adaptive > summary.json`
             # stays valid JSON
             for r in results:
+                if r.config is None or r.measured_s is None:
+                    print(f"  #{r.sample.seq:<3d} {r.request.tenant:10s} "
+                          f"{r.request.workload:12s} {r.status}: "
+                          f"{r.error}", file=sys.stderr)
+                    continue
                 print(f"  #{r.sample.seq:<3d} {r.request.tenant:10s} "
                       f"{r.request.workload:12s} "
                       f"{r.config.partitions}x{r.config.tasks} "
@@ -272,6 +319,9 @@ def adaptive_serve(
         summary["throughput_rps"] = n_requests / max(wall, 1e-12)
         summary["slo_ms"] = slo_ms
         summary["shed"] = len(sched.queue.shed)
+        summary["resilience"] = policy_obj is not None
+        if faults is not None:
+            summary["faults_injected"] = faults.fired
         if cache_path:
             sched.cache.save()
     if metrics is not None:
@@ -345,6 +395,19 @@ def main() -> None:
                     help="enable the metrics registry; write its "
                          "snapshot JSON here (summary also gains a "
                          "'metrics' block)")
+    ap.add_argument("--resilience", action="store_true",
+                    help="arm the fault-tolerance layer: deadline-aware "
+                         "retries, per-(tenant, stage) circuit breaker "
+                         "over the degradation ladder, individual "
+                         "request failure instead of scheduler crashes")
+    ap.add_argument("--watchdog-ms", type=float, default=None,
+                    help="execution watchdog: abandon + requeue-once a "
+                         "dispatch exceeding this many ms (implies "
+                         "--resilience)")
+    ap.add_argument("--fault-plan", default=None,
+                    help="FaultPlan JSON for deterministic fault "
+                         "injection (implies --resilience; see "
+                         "benchmarks/data/chaos_faults.json)")
     args = ap.parse_args()
 
     if args.adaptive:
@@ -356,7 +419,9 @@ def main() -> None:
             cache_path=args.tuning_cache, window=args.window,
             workers=args.workers, tenants=args.tenants,
             model=args.model, model_dir=args.model_dir,
-            trace_out=args.trace_out, metrics_out=args.metrics_out)
+            trace_out=args.trace_out, metrics_out=args.metrics_out,
+            resilience=args.resilience, watchdog_ms=args.watchdog_ms,
+            fault_plan=args.fault_plan)
         print(json.dumps(summary, indent=2))
         return
 

@@ -56,6 +56,36 @@ def _fmt_s(v: Optional[float]) -> str:
     return f"{v:.3f}s"
 
 
+_BREAKER_STATES = {0: "closed", 1: "half-open", 2: "open"}
+
+
+def _render_resilience(metrics: dict) -> list[str]:
+    """The fault-tolerance dashboard block: injected / recovered /
+    degraded totals and the per-(tenant, stage) circuit-breaker states
+    (``serving.breaker.state`` gauges encode 0=closed, 1=half-open,
+    2=open)."""
+    lines: list[str] = []
+
+    def total(name: str) -> int:
+        return int(sum(v["value"] for v in
+                       metrics.get(name, {}).get("values", [])))
+
+    counts = {short: total(f"serving.faults.{short}")
+              for short in ("injected", "recovered", "degraded")}
+    counts["watchdog"] = total("serving.watchdog.fired")
+    counts["failed"] = total("serving.requests.failed")
+    if any(counts.values()):
+        lines.append("faults   " + "  ".join(
+            f"{k} {v}" for k, v in counts.items()))
+    for entry in metrics.get("serving.breaker.state", {}).get("values", []):
+        sel = entry["labels"]
+        state = _BREAKER_STATES.get(int(entry["value"]),
+                                    str(entry["value"]))
+        lines.append(f"breaker  {sel.get('tenant', '?'):<12s} "
+                     f"{sel.get('stage', '?'):<10s} {state}")
+    return lines
+
+
 def render(samples: list[TelemetrySample],
            metrics: Optional[dict] = None) -> str:
     """The report string for a sample list + optional metrics snapshot
@@ -90,7 +120,17 @@ def render(samples: list[TelemetrySample],
         lines.append(f"tenant   {name:<12s} served {t['requests']:<6d} "
                      f"hits {t['cache_hits']:<6d} "
                      f"refines {t['refinements']:<3d} err {err}")
+    by_status = s.get("by_status") or {}
+    if set(by_status) - {"ok"}:
+        lines.append("status   " + "  ".join(
+            f"{k} {by_status[k]}"
+            for k in ("ok", "degraded", "failed", "timeout")
+            if by_status.get(k)))
     if metrics:
+        res = _render_resilience(metrics)
+        if res:
+            lines.append("== resilience ==")
+            lines.extend(res)
         lines.append("== metrics ==")
         for name in sorted(metrics):
             fam = metrics[name]

@@ -18,6 +18,13 @@ signal (``measured_s`` normalized by window occupancy over the host's
 calibrated parallel capacity).  ``isolate_tenants=True`` gives every
 tenant its own cache namespace, drift windows, and — on first refit — a
 private fork of the shared base model (``tenancy.py``).
+
+Fault tolerance (``resilience/``): pass ``resilience=ResiliencePolicy()``
+to either scheduler for deadline-aware retries, a per-(tenant, stage)
+circuit breaker over the degradation ladder, an execution watchdog, and
+individual request failure instead of scheduler crashes; pass
+``faults=FaultPlan(...)`` to deterministically inject the failures that
+prove it (README "Resilience").
 """
 from repro.serving.clock import SystemClock, VirtualClock
 from repro.serving.engine import (ConcurrentScheduler, ContextPool,
@@ -29,6 +36,12 @@ from repro.serving.observability import (NULL_METRICS, NULL_TRACER,
 from repro.serving.queue import POLICIES, RequestQueue, WorkloadRequest
 from repro.serving.refinement import (DriftDetector, RefinementResult,
                                       Refiner, contention_factor)
+from repro.serving.resilience import (NULL_FAULTS, BreakerConfig,
+                                      CircuitBreaker, FaultPlan, FaultSpec,
+                                      InjectedFault, ResiliencePolicy,
+                                      RetryPolicy, atomic_write_json,
+                                      call_with_retry, corrupt_json_file,
+                                      nearest_bucket_entry, quarantine_file)
 from repro.serving.scheduler import (AdaptiveScheduler,
                                      OverlapHeuristicModel, PendingRequest,
                                      RequestResult, make_trace)
@@ -53,4 +66,8 @@ __all__ = [
     "Tracer", "NullTracer", "NULL_TRACER",
     "MetricsRegistry", "NullMetrics", "NULL_METRICS",
     "HotPathProfiler", "aggregate_stage_times",
+    "BreakerConfig", "CircuitBreaker", "FaultPlan", "FaultSpec",
+    "InjectedFault", "NULL_FAULTS", "ResiliencePolicy", "RetryPolicy",
+    "atomic_write_json", "call_with_retry", "corrupt_json_file",
+    "nearest_bucket_entry", "quarantine_file",
 ]

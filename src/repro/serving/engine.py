@@ -49,6 +49,7 @@ raw-wall-time signal for A/B measurement.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import sys
 from concurrent.futures import FIRST_COMPLETED, wait
 from typing import Optional
@@ -166,6 +167,13 @@ class ConcurrentScheduler(AdaptiveScheduler):
         # measured speedups into the cache — the exact poisoning the
         # load-aware drift signal exists to prevent
         self._deferred_refinements: list = []
+        # watchdog-abandoned futures: the worker is still running (a
+        # thread cannot be cancelled mid-dispatch), so the future parks
+        # here and a done-callback reclaims its ExecutionContext when
+        # the backend finally returns; pool.shutdown(wait=True) at
+        # close() joins them
+        self._zombies: set = set()
+        self._m_watchdog = self.metrics.counter("serving.watchdog.fired")
 
     @property
     def parallel_capacity(self) -> float:
@@ -208,11 +216,18 @@ class ConcurrentScheduler(AdaptiveScheduler):
 
     def _flush_refinements(self) -> None:
         """Run queued refinements on the now-idle pool (callers drain
-        first), then release the held runners."""
+        first), then release the held runners.  Under a resilience
+        policy a failing refinement loses one model update, never the
+        run."""
         while self._deferred_refinements:
             pending, ctx, key, entry = self._deferred_refinements.pop(0)
             try:
                 super()._refine(pending, ctx, key, entry)
+            except Exception:  # noqa: BLE001 — fault barrier
+                if self.resilience is None:
+                    raise
+                self.stats["refine_failures"] += 1
+                self.metrics.counter("serving.refine.failed").inc()
             finally:
                 self._release_runner(pending.runner)
 
@@ -233,44 +248,149 @@ class ConcurrentScheduler(AdaptiveScheduler):
         finally:
             sys.setswitchinterval(prev_switch)
 
+    def _flush_ready(self, flushed, results: dict) -> None:
+        """Retire a bucket's now-contiguous dispatch-order run.  ``None``
+        payloads (failed or watchdog-abandoned slots) were already
+        accounted for when their slot advanced."""
+        for item in flushed:
+            if item is None:
+                continue
+            rp, routs, rmeasured = item
+            try:
+                results[rp.order] = self._retire(rp, routs, rmeasured)
+            except Exception as e:  # noqa: BLE001 — fault barrier
+                if self.resilience is None:
+                    raise
+                results[rp.order] = self._fail_request(rp.req, rp, e)
+                rp.defer_release = False
+            # a retire that triggered a refinement keeps its runner
+            # leased until the deferred re-profiling has run
+            if not rp.defer_release:
+                self._release_runner(rp.runner)
+
     def _retire_completed(self, done, inflight: dict,
                           results: dict) -> Optional[BaseException]:
         """Retire a set of completed futures, flushing each touched
         bucket's contiguous dispatch-order run.  A future that raised
         still advances its bucket (a poisoned slot would hold every
         later completion of that bucket forever) and releases its
-        context before the error is reported; the first error seen is
-        returned rather than raised so the caller can drain the rest."""
+        context before the error is reported.  Without a resilience
+        policy the first error seen is returned rather than raised so
+        the caller can drain the rest; WITH one, an execution error
+        fails that request individually (error telemetry + ``status``)
+        and the loop keeps serving."""
         error: Optional[BaseException] = None
         for fut in done:
             p = inflight.pop(fut)
             try:
                 payload = (p, *fut.result())
-            except BaseException as e:
+            # deliberate blanket catch: ANY worker outcome must advance
+            # the bucket slot or every later completion hangs
+            except BaseException as e:  # noqa: BLE001
                 self._release_runner(p.runner)
                 payload = None
-                if error is None:
+                if self.resilience is not None and isinstance(e, Exception):
+                    results[p.order] = self._fail_request(p.req, p, e)
+                elif error is None:
                     error = e
-            for flushed in self.retirer.complete(p.key, p.bucket_idx,
-                                                 payload):
-                if flushed is None:          # the failed slot itself
-                    continue
-                rp, routs, rmeasured = flushed
-                results[rp.order] = self._retire(rp, routs, rmeasured)
-                # a retire that triggered a refinement keeps its runner
-                # leased until the deferred re-profiling has run
-                if not rp.defer_release:
-                    self._release_runner(rp.runner)
+            self._flush_ready(self.retirer.complete(p.key, p.bucket_idx,
+                                                    payload), results)
         return error
+
+    def _wait_completed(self, inflight: dict, results: dict) -> set:
+        """Wait for at least one completion — with the resilience
+        watchdog armed, wake at the earliest in-flight deadline instead
+        and reap overdue executions (abandon + requeue once, then fail
+        individually).  Returns the completed set; empty after a reap
+        pass (the caller re-enters with the updated window)."""
+        if not inflight:
+            return set()
+        wd = self.resilience.watchdog_s \
+            if self.resilience is not None else None
+        if wd is None:
+            done, _ = wait(inflight, return_when=FIRST_COMPLETED)
+            return done
+        while True:
+            now = self.clock.now()
+            deadlines = [p.watchdog_deadline_s for p in inflight.values()
+                         if p.watchdog_deadline_s is not None]
+            # no stamped deadline = nothing has STARTED executing yet
+            # (deadlines arm at worker entry); heartbeat at wd anyway
+            timeout = max(1e-3, min(deadlines) - now) if deadlines else wd
+            done, _ = wait(inflight, timeout=timeout,
+                           return_when=FIRST_COMPLETED)
+            if done:
+                return done
+            if self._reap_overdue(inflight, results) or not inflight:
+                return set()
+
+    def _reclaim_zombie(self, fut, runner):
+        def _cb(f) -> None:
+            self._zombies.discard(fut)
+            try:
+                f.result()
+            # the zombie's outcome is irrelevant — its slot was already
+            # advanced and its request requeued or failed
+            except BaseException:  # noqa: BLE001
+                pass
+            self._release_runner(runner)
+        return _cb
+
+    def _watched_execute(self, p):
+        """Execute stage under the watchdog: the deadline arms at
+        WORKER ENTRY, not at submit — a task queued behind a
+        zombie-occupied worker must not burn its execution budget
+        waiting for a thread."""
+        p.watchdog_deadline_s = self.clock.now() + self.resilience.watchdog_s
+        return self._execute_safe(p)
+
+    def _reap_overdue(self, inflight: dict, results: dict) -> bool:
+        """Watchdog: an execution past its deadline is abandoned (the
+        worker thread cannot be cancelled; the future parks in
+        ``_zombies`` and a done-callback reclaims its context), its
+        bucket slot advances, and the request is re-dispatched on a
+        FRESH runner at most ``requeue_limit`` times before failing
+        individually with ``status="timeout"``."""
+        now = self.clock.now()
+        acted = False
+        for fut, p in list(inflight.items()):
+            if fut.done() or p.watchdog_deadline_s is None \
+                    or now < p.watchdog_deadline_s:
+                continue
+            acted = True
+            del inflight[fut]
+            self._zombies.add(fut)
+            fut.add_done_callback(self._reclaim_zombie(fut, p.runner))
+            self._m_watchdog.inc()
+            self.stats["watchdog_fired"] += 1
+            self._flush_ready(self.retirer.complete(p.key, p.bucket_idx,
+                                                    None), results)
+            if p.requeues < self.resilience.requeue_limit:
+                p2 = dataclasses.replace(
+                    p, runner=self._make_runner(p.req),
+                    requeues=p.requeues + 1,
+                    bucket_idx=self.retirer.issue(p.key),
+                    watchdog_deadline_s=None)
+                inflight[self.pool.submit(self._watched_execute, p2)] = p2
+            else:
+                results[p.order] = self._fail_request(
+                    p.req, p,
+                    TimeoutError(
+                        f"execution exceeded the "
+                        f"{self.resilience.watchdog_s:g}s watchdog "
+                        f"{p.requeues + 1}x"),
+                    status="timeout")
+        return acted
 
     def _drain(self, inflight: dict,
                results: dict) -> Optional[BaseException]:
         """Retire everything in flight; returns the first error seen."""
         error = None
         while inflight:
-            done, _ = wait(inflight, return_when=FIRST_COMPLETED)
-            error = self._retire_completed(done, inflight,
-                                           results) or error
+            done = self._wait_completed(inflight, results)
+            if done:
+                error = self._retire_completed(done, inflight,
+                                               results) or error
         return error
 
     def _run(self, max_requests: Optional[int]) -> list[RequestResult]:
@@ -316,7 +436,14 @@ class ConcurrentScheduler(AdaptiveScheduler):
                     req = self.queue.pop()
                 except IndexError:
                     break   # deadline policy shed everything that was left
-                batch.append(self._decide(req))
+                try:
+                    batch.append(self._decide(req))
+                except Exception as e:  # noqa: BLE001 — fault barrier
+                    if self.resilience is None:
+                        raise
+                    # _decide failed before allocating an order slot
+                    results[self._order] = self._fail_request(req, None, e)
+                    self._order += 1
                 decided += 1
             # batched cold path: one model search for every cold bucket
             # in this fill, measured on a quiesced pool — profiling
@@ -328,11 +455,22 @@ class ConcurrentScheduler(AdaptiveScheduler):
             if colds or anchors:
                 check(self._drain(inflight, results))
             for p in anchors:
-                self._measure_anchor(p)
+                if self.resilience is None:
+                    self._measure_anchor(p)
+                else:
+                    self._try_anchor(p)
             if len(colds) == 1:
-                self._tune_cold(colds[0])
+                self._tune_cold_safe(colds[0])
             elif colds:
-                self._tune_cold_batch(colds)
+                try:
+                    self._tune_cold_batch(colds)
+                except Exception:  # noqa: BLE001 — fault barrier
+                    if self.resilience is None:
+                        raise
+                    # batched search died: walk the ladder per bucket
+                    for p in colds:
+                        if p.entry is None:
+                            self._tune_cold_safe(p)
             # dispatch: stamp each request's window occupancy — the
             # load-aware drift signal's numerator.  The whole wave is in
             # flight together (submits are microseconds, executions are
@@ -341,16 +479,22 @@ class ConcurrentScheduler(AdaptiveScheduler):
             # the wave's FIRST request marked uncontended and its
             # contention-inflated wall time reading as drift
             occupancy = len(inflight) + len(batch)
+            wd = self.resilience.watchdog_s \
+                if self.resilience is not None else None
+            run_stage = (self._execute_safe if wd is None
+                         else self._watched_execute)
             for p in batch:
                 p.bucket_idx = self.retirer.issue(p.key)
                 p.inflight = occupancy
-                inflight[self.pool.submit(self._execute, p)] = p
+                inflight[self.pool.submit(run_stage, p)] = p
             self._m_inflight.set(occupancy)
             if not inflight:
                 continue
-            # retire whatever completed first (out of order)
-            done, _ = wait(inflight, return_when=FIRST_COMPLETED)
-            check(self._retire_completed(done, inflight, results))
+            # retire whatever completed first (out of order); an empty
+            # set means the watchdog reshaped the window instead
+            done = self._wait_completed(inflight, results)
+            if done:
+                check(self._retire_completed(done, inflight, results))
 
         self._flush_refinements()          # pool is idle: nothing in flight
         self._m_inflight.set(0)

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import random
 from typing import Optional, Sequence
 
 import jax
@@ -30,6 +31,7 @@ import numpy as np
 
 from repro.core import features as feat_lib
 from repro.core.autotuner import TuneResult, TuningCache
+from repro.core.backends import get_backend
 from repro.core.features import RAW_FEATURE_NAMES
 # re-exported for back-compat: the heuristic used to be defined here
 from repro.core.modeling.heuristic import OverlapHeuristicModel  # noqa: F401
@@ -42,6 +44,8 @@ from repro.serving.clock import SystemClock
 from repro.serving.observability import NULL_METRICS, NULL_TRACER, STAGES
 from repro.serving.queue import RequestQueue, WorkloadRequest
 from repro.serving.refinement import DriftDetector, Refiner
+from repro.serving.resilience import NULL_FAULTS, CircuitBreaker, \
+    FaultPlan, ResiliencePolicy, call_with_retry, nearest_bucket_entry
 from repro.serving.telemetry import TelemetryLog, TelemetrySample, \
     relative_error
 from repro.serving.tenancy import TenantContext, TenantRegistry
@@ -52,13 +56,19 @@ _I_T_SINGLE = RAW_FEATURE_NAMES.index("t_single_us")
 @dataclasses.dataclass
 class RequestResult:
     request: WorkloadRequest
-    config: StreamConfig
+    config: Optional[StreamConfig]
     outputs: list                  # per-slice outputs, task-major order
-    measured_s: float
+    measured_s: Optional[float]
     predicted_s: Optional[float]
     cache_hit: bool
     refined: bool
     sample: TelemetrySample
+    #: terminal disposition: "served" | "degraded" (served via a
+    #: fallback rung) | "failed" | "timeout" — a request is NEVER lost;
+    #: under a ResiliencePolicy every submitted request retires with one
+    #: of these instead of crashing the scheduler
+    status: str = "served"
+    error: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -86,6 +96,10 @@ class PendingRequest:
     t_decide_s: Optional[float] = None
     t_dispatch_s: Optional[float] = None
     queue_depth: int = 0           # queue length observed at decide time
+    # resilience bookkeeping (all inert without a ResiliencePolicy)
+    degraded_via: Optional[str] = None   # first fallback rung taken
+    requeues: int = 0              # watchdog re-dispatch count (engine)
+    watchdog_deadline_s: Optional[float] = None
 
 
 class AdaptiveScheduler:
@@ -107,7 +121,9 @@ class AdaptiveScheduler:
                  keep_outputs: bool = True,
                  clock=None,
                  tracer=None,
-                 metrics=None):
+                 metrics=None,
+                 faults: Optional[FaultPlan] = None,
+                 resilience: Optional[ResiliencePolicy] = None):
         self.model = model
         self.backend_name = backend
         # ONE time source for every latency stamp, deadline judgment,
@@ -147,6 +163,22 @@ class AdaptiveScheduler:
         self._m_slo_violations = m.counter("serving.slo.violations")
         self._m_queue_depth = m.gauge("serving.queue.depth")
         self._m_inflight = m.gauge("serving.inflight")
+        self._m_fault_recovered = m.counter("serving.faults.recovered")
+        self._m_fault_degraded = m.counter("serving.faults.degraded")
+        self._m_failed = m.counter("serving.requests.failed")
+        # fault tolerance: OFF unless a policy is given — every resilient
+        # wrapper below passes straight through when self.resilience is
+        # None, so the legacy (raise-on-error) behavior is bit-identical
+        self.faults = faults if faults is not None else NULL_FAULTS
+        if self.faults.enabled:
+            self.faults.bind(metrics=self.metrics)
+        self.resilience = resilience
+        self.breaker: Optional[CircuitBreaker] = None
+        if resilience is not None:
+            self.breaker = CircuitBreaker(resilience.breaker,
+                                          clock=self.clock,
+                                          metrics=self.metrics)
+            self._fallback_model = OverlapHeuristicModel()
         # tenant isolation: with ``isolate_tenants`` every tenant gets a
         # private cache namespace, drift windows, and (on first refit) a
         # fork of the shared base model.  Off by default — the registry
@@ -206,15 +238,45 @@ class AdaptiveScheduler:
         """Serial pipeline: decide → (cold tune) → execute → retire, all
         on the calling thread.  The concurrent engine reuses exactly
         these stages, overlapped."""
-        pending = self._decide(req)
-        if pending.needs_anchor:
-            self._measure_anchor(pending)
-        if pending.entry is None:
-            self._tune_cold(pending)
-        outs, measured_s = self._execute(pending)
-        result = self._retire(pending, outs, measured_s)
-        self._release_runner(pending.runner)
+        if self.resilience is None:
+            pending = self._decide(req)
+            if pending.needs_anchor:
+                self._measure_anchor(pending)
+            if pending.entry is None:
+                self._tune_cold(pending)
+            outs, measured_s = self._execute(pending)
+            result = self._retire(pending, outs, measured_s)
+            self._release_runner(pending.runner)
+            return result
+        # resilient pipeline: any stage error fails THIS request
+        # individually (error telemetry sample + status), never the loop
+        pending = None
+        try:
+            pending = self._decide(req)
+            if pending.needs_anchor:
+                self._try_anchor(pending)
+            if pending.entry is None:
+                self._tune_cold_safe(pending)
+            outs, measured_s = self._execute_safe(pending)
+            result = self._retire(pending, outs, measured_s)
+        # the per-request fault barrier: ANY stage failure
+        # becomes an individual terminal result, never a
+        # scheduler crash
+        except Exception as e:  # noqa: BLE001
+            result = self._fail_request(req, pending, e)
+        finally:
+            if pending is not None:
+                self._release_runner(pending.runner)
         return result
+
+    def _try_anchor(self, pending: PendingRequest) -> None:
+        """The anchor is advisory (it only re-enables runtime prediction
+        and drift for a persisted warm hit): under a resilience policy a
+        failing anchor measurement is skipped, not fatal."""
+        try:
+            self._measure_anchor(pending)
+        except Exception:  # noqa: BLE001 — advisory stage
+            pending.needs_anchor = False
 
     # -- stage 1: decide ------------------------------------------------------
 
@@ -238,6 +300,9 @@ class AdaptiveScheduler:
         t0 = self.clock.now()
         with self.tracer.span("decide", trace_id=req.trace_id,
                               tenant=req.tenant, workload=req.workload):
+            # fired before the runner lease so an injected decide error
+            # never leaks a pooled ExecutionContext
+            self.faults.fire("decide")
             runner = self._make_runner(req)
             n_rows = next(iter(req.chunked.values())).shape[0]
             ctx = self.tenancy.get(req.tenant)
@@ -300,19 +365,22 @@ class AdaptiveScheduler:
             return pending.tenant_ctx.active_model
         return self.model
 
-    def _tune_cold(self, pending: PendingRequest) -> TuneResult:
+    def _tune_cold(self, pending: PendingRequest, *,
+                   model=None, source: str = "model") -> TuneResult:
         t0 = self.clock.now()
         with self.tracer.span("tune.cold", trace_id=pending.req.trace_id,
                               workload=pending.req.workload):
+            self.faults.fire("tune.cold")
             feats = self._extract(pending)
             t_feat = self.clock.now() - t0
             cands = self._feasible_configs(pending.n_rows)
-            best, preds, t_search = search_best(self._model_for(pending),
-                                                feats, cands)
+            best, preds, t_search = search_best(
+                model if model is not None else self._model_for(pending),
+                feats, cands)
             self.stats["model_searches"] += 1
             self._m_searches.inc()
             result = TuneResult(best, float(np.max(preds)), t_feat, t_search,
-                                backend=self.backend_name, source="model")
+                                backend=self.backend_name, source=source)
             self.cache.put(pending.key, result)
             pending.entry = result
         self._m_stage["tune"].observe(self.clock.now() - t0)
@@ -345,6 +413,7 @@ class AdaptiveScheduler:
                               trace_id=uniques[0].req.trace_id,
                               buckets=len(uniques),
                               requests=len(pendings)):
+            self.faults.fire("tune.cold")
             t0 = self.clock.now()
             F = np.stack([self._extract(p) for p in uniques])
             t_feat = self.clock.now() - t0
@@ -398,6 +467,159 @@ class AdaptiveScheduler:
             else:
                 self._tune_cold(p)
 
+    # -- resilient stage wrappers ---------------------------------------------
+    # (pass-throughs when self.resilience is None; see resilience/ and
+    # the README "Resilience" ladder table)
+
+    def _request_rng(self, req: WorkloadRequest) -> random.Random:
+        """Per-request seeded RNG for retry jitter: deterministic given
+        (policy seed, request seq), de-correlated across requests."""
+        return random.Random((self.resilience.seed << 20) ^ (req.seq & 0xFFFFF))
+
+    def _degrade(self, pending: PendingRequest, via: str) -> None:
+        if pending.degraded_via is None:
+            pending.degraded_via = via
+            self._m_fault_degraded.inc()
+            self.stats["degraded"] += 1
+
+    def _tune_cold_safe(self, pending: PendingRequest) -> TuneResult:
+        """Cold search down the ladder: primary model (retried within the
+        SLO budget, breaker-guarded) → OverlapHeuristicModel → nearest
+        cached shape-bucket → single stream.  Always yields an entry —
+        a request is never failed for want of a *tuning* decision."""
+        if self.resilience is None:
+            return self._tune_cold(pending)
+        req = pending.req
+        bkey = (req.tenant, "tune")
+        if self.breaker.allow(bkey):
+            try:
+                result = call_with_retry(
+                    lambda: self._tune_cold(pending),
+                    policy=self.resilience.retry,
+                    rng=self._request_rng(req), clock=self.clock,
+                    deadline_s=req.deadline_s,
+                    on_recover=lambda n: self._m_fault_recovered.inc(n))
+                self.breaker.record_success(bkey)
+                return result
+            except Exception:  # noqa: BLE001 — ladder rung
+                self.breaker.record_failure(bkey)
+        # rung 1: the shape-only heuristic needs no trained weights, but
+        # still profiles features — it can fail too (backend death)
+        try:
+            result = self._tune_cold(pending, model=self._fallback_model,
+                                     source="fallback")
+            self._degrade(pending, "heuristic-model")
+            return result
+        except Exception:  # noqa: BLE001 — ladder rung
+            pass
+        # rung 2: no profiling at all — borrow the nearest cached shape
+        # bucket, else run single-stream; NOT cached (it is a guess, and
+        # caching it would freeze the guess into the warm path)
+        entry = nearest_bucket_entry(self.cache, pending.key,
+                                     pending.n_rows)
+        if entry is not None:
+            entry = dataclasses.replace(entry, source="nearest-bucket",
+                                        cached=False)
+            via = "nearest-bucket"
+        else:
+            entry = TuneResult(SINGLE_STREAM, 0.0, 0.0, 0.0,
+                               backend=self.backend_name,
+                               source="degraded")
+            via = "single-stream"
+        pending.entry = entry
+        self._degrade(pending, via)
+        return entry
+
+    def _dispatch_fallback(self, pending: PendingRequest) -> tuple[list, float]:
+        """One dispatch on the reference backend: the runner's
+        ExecutionContext is backend-independent, so stepping down is a
+        temporary swap of the dispatch strategy, not a new context."""
+        runner = pending.runner
+        prev = runner.backend
+        runner.backend = get_backend(self.resilience.fallback_backend)
+        try:
+            return self._execute(pending)
+        finally:
+            runner.backend = prev
+
+    def _execute_safe(self, pending: PendingRequest) -> tuple[list, float]:
+        """Dispatch down the ladder: primary backend (retried within the
+        SLO budget, breaker-guarded) → ``host-sync`` reference backend →
+        individual request failure (raises; caller converts)."""
+        if self.resilience is None:
+            return self._execute(pending)
+        req = pending.req
+        bkey = (req.tenant, "dispatch")
+        have_fallback = \
+            self.backend_name != self.resilience.fallback_backend
+        if not self.breaker.allow(bkey) and have_fallback:
+            self._degrade(pending, "backend")
+            return self._dispatch_fallback(pending)
+        try:
+            result = call_with_retry(
+                lambda: self._execute(pending),
+                policy=self.resilience.retry,
+                rng=self._request_rng(req), clock=self.clock,
+                deadline_s=req.deadline_s,
+                on_recover=lambda n: self._m_fault_recovered.inc(n))
+            self.breaker.record_success(bkey)
+            return result
+        except Exception:  # noqa: BLE001 — ladder rung
+            self.breaker.record_failure(bkey)
+            if not have_fallback:
+                raise
+        self._degrade(pending, "backend")
+        return self._dispatch_fallback(pending)
+
+    def _fail_request(self, req: WorkloadRequest,
+                      pending: Optional[PendingRequest],
+                      error: BaseException,
+                      status: str = "failed") -> RequestResult:
+        """Terminal *individual* failure: an error telemetry sample with
+        ``status``/``error`` set, counters bumped, and a RequestResult
+        the caller can return — the scheduler itself never crashes."""
+        now = self.clock.now()
+        config = pending.entry.config \
+            if pending is not None and pending.entry is not None else None
+        err = f"{type(error).__name__}: {error}"
+        slo_violation = req.deadline_s is not None and now > req.deadline_s
+        self._seq += 1
+        sample = TelemetrySample(
+            seq=self._seq, tenant=req.tenant, workload=req.workload,
+            key=pending.key if pending is not None else "",
+            backend=self.backend_name,
+            partitions=config.partitions if config is not None else 0,
+            tasks=config.tasks if config is not None else 0,
+            cache_hit=bool(pending.cache_hit) if pending is not None
+            else False,
+            predicted_s=None, measured_s=None, rel_error=None,
+            status=status, error=err,
+            t_enqueue_s=req.arrival_s,
+            t_decide_s=pending.t_decide_s if pending is not None else None,
+            t_dispatch_s=pending.t_dispatch_s
+            if pending is not None else None,
+            t_retire_s=now,
+            latency_s=(now - req.arrival_s
+                       if req.arrival_s is not None else None),
+            deadline_s=req.deadline_s, slo_violation=slo_violation,
+            queue_depth=pending.queue_depth if pending is not None else 0,
+            trace_id=req.trace_id)
+        self.telemetry.append(sample)
+        self.stats["requests"] += 1
+        self.stats["failed"] += 1
+        self.stats[f"tenant.{req.tenant}.failed"] += 1
+        self._m_requests.inc()
+        self._m_failed.inc()
+        if slo_violation:
+            self.stats["slo_violations"] += 1
+            self._m_slo_violations.inc()
+        return RequestResult(
+            request=req, config=config, outputs=[], measured_s=None,
+            predicted_s=None,
+            cache_hit=bool(pending.cache_hit) if pending is not None
+            else False,
+            refined=False, sample=sample, status=status, error=err)
+
     # -- stage 2: execute -----------------------------------------------------
 
     def _execute(self, pending: PendingRequest) -> tuple[list, float]:
@@ -412,6 +634,7 @@ class AdaptiveScheduler:
         with self.tracer.span("dispatch", trace_id=pending.req.trace_id,
                               partitions=config.partitions,
                               tasks=config.tasks):
+            self.faults.fire("dispatch")
             if self.warm_before_measure and \
                     (key, config) not in self._warmed:
                 runner.warmup(config)
@@ -459,6 +682,7 @@ class AdaptiveScheduler:
         with self.tracer.span("retire", trace_id=req.trace_id,
                               tenant=req.tenant,
                               cache_hit=pending.cache_hit):
+            self.faults.fire("retire")
             config = entry.config
             predicted_s = self._predicted_runtime(key, entry)
             load = self._load_factor(pending)
@@ -470,8 +694,17 @@ class AdaptiveScheduler:
             if ctx.drift.observe(key, rel, load_factor=load):
                 ctx.drift.reset(key)
                 self._m_drift_fired.inc()
-                self._refine(pending, ctx, key, entry)
-                refined = True
+                try:
+                    self._refine(pending, ctx, key, entry)
+                    refined = True
+                except Exception:  # noqa: BLE001
+                    # refinement is an optimization: under a resilience
+                    # policy a failing refine loses one model update,
+                    # never the request (or the scheduler)
+                    if self.resilience is None:
+                        raise
+                    self.stats["refine_failures"] += 1
+                    self.metrics.counter("serving.refine.failed").inc()
 
             t_retire = self.clock.now()
             latency = (t_retire - req.arrival_s
@@ -487,6 +720,9 @@ class AdaptiveScheduler:
                 tasks=config.tasks, cache_hit=pending.cache_hit,
                 predicted_s=predicted_s, measured_s=measured_s,
                 rel_error=rel,
+                status=("degraded" if pending.degraded_via is not None
+                        else "ok"),
+                degraded_via=pending.degraded_via,
                 refined=refined, source=entry.source,
                 inflight=pending.inflight, load_factor=load,
                 measured_norm_s=measured_norm_s,
@@ -516,7 +752,9 @@ class AdaptiveScheduler:
             request=req, config=config,
             outputs=outs if self.keep_outputs else [],
             measured_s=measured_s, predicted_s=predicted_s,
-            cache_hit=pending.cache_hit, refined=refined, sample=sample)
+            cache_hit=pending.cache_hit, refined=refined, sample=sample,
+            status=("degraded" if pending.degraded_via is not None
+                    else "served"))
 
     def _refine(self, pending: PendingRequest, ctx: TenantContext,
                 key: str, entry: TuneResult) -> None:
@@ -528,6 +766,7 @@ class AdaptiveScheduler:
         measurements — like all profiling — happen on an idle pool."""
         with self.tracer.span("refine", trace_id=pending.req.trace_id,
                               key=key):
+            self.faults.fire("refine")
             refinement = self.refiner.refine(
                 pending.runner, key, self._feats.get(key), entry,
                 model=ctx.fork_for_refit())

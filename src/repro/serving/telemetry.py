@@ -31,10 +31,22 @@ class TelemetrySample:
     tasks: int
     cache_hit: bool
     predicted_s: Optional[float]  # model-predicted runtime (None if unknown)
-    measured_s: float
+    #: measured execution seconds; None for a request that never
+    #: executed (status "failed"/"timeout" under a resilience policy)
+    measured_s: Optional[float]
     rel_error: Optional[float]    # |measured - predicted| / predicted
     refined: bool = False         # this request triggered a refinement
     source: str = "model"         # config provenance: model | refined
+    # -- resilience disposition (PR 8) -------------------------------------
+    #: "ok" | "degraded" (served via a fallback rung) | "failed" |
+    #: "timeout" — failed/timeout samples are the *error telemetry*: the
+    #: request is terminal and accounted for, the scheduler survived
+    status: str = "ok"
+    #: "TypeName: message" for failed/timeout samples
+    error: Optional[str] = None
+    #: first fallback rung taken when status == "degraded"
+    #: (heuristic-model | nearest-bucket | single-stream | backend)
+    degraded_via: Optional[str] = None
     # -- load-aware drift fields (concurrent engine) ----------------------
     #: window occupancy when this request was dispatched (itself included);
     #: 1 under the serial scheduler
@@ -225,12 +237,20 @@ class TelemetryLog:
         lats = [s.latency_s for s in self.samples if s.latency_s is not None]
         with_deadline = [s for s in self.samples if s.deadline_s is not None]
         violations = sum(s.slo_violation for s in with_deadline)
+        by_status: dict[str, int] = {}
+        for s in self.samples:
+            by_status[s.status] = by_status.get(s.status, 0) + 1
         return {
             "requests": n,
             "cache_hits": hits,
             "hit_rate": hits / n if n else 0.0,
             "refinements": sum(s.refined for s in self.samples),
-            "total_measured_s": sum(s.measured_s for s in self.samples),
+            # failed/timeout samples carry measured_s=None — a window
+            # where EVERY request errored must still summarize, so the
+            # aggregate skips them rather than TypeError-ing
+            "total_measured_s": sum(s.measured_s for s in self.samples
+                                    if s.measured_s is not None),
+            "by_status": by_status,
             "latency": latency_stats(lats),
             "slo_violations": violations,
             "slo_violation_rate": (violations / len(with_deadline)

@@ -54,6 +54,7 @@ from repro.serving.clock import VirtualClock
 from repro.serving.observability import NULL_METRICS, NULL_TRACER
 from repro.serving.queue import POLICIES, RequestQueue, WorkloadRequest
 from repro.serving.refinement import DriftDetector, contention_factor
+from repro.serving.resilience import NULL_FAULTS, FaultPlan, InjectedFault
 from repro.serving.telemetry import (TelemetryLog, TelemetrySample,
                                      latency_stats, relative_error)
 
@@ -307,7 +308,8 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
                    seed: int = 0, contention_sigma: float = 0.12,
                    drift_injections: Iterable[tuple] = (),
                    telemetry: Optional[TelemetryLog] = None,
-                   tracer=None, metrics=None) -> dict:
+                   tracer=None, metrics=None,
+                   faults: Optional[FaultPlan] = None) -> dict:
     """Replay ``trace`` under ``policy`` on a virtual clock; return the
     tail-latency / SLO / queue-depth / drift report.
 
@@ -334,6 +336,15 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
     ``tune.cold``, plus ``dispatch`` / ``retire`` / ``refine``); the
     metrics registry counts the same families the schedulers do, so a
     seeded replay's ``snapshot()`` is deterministic.
+
+    ``faults`` is the same :class:`~repro.serving.resilience.FaultPlan`
+    the live schedulers take, evaluated at the ``decide`` /
+    ``tune.cold`` / ``dispatch`` sites per dispatched request: an
+    ``error`` fault fails the request individually (counted in the
+    ``failed`` block and, when a deadline was carried, against the SLO
+    like shed work); a ``latency`` fault's delay is charged to the
+    request's virtual service time — the plan is bound with
+    ``sleep=None`` so no real wall time passes.
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
@@ -348,6 +359,10 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
     m_drift = metrics.counter("serving.drift.fired")
     m_refine = metrics.counter("serving.refinements")
     m_slo = metrics.counter("serving.slo.violations")
+    m_failed = metrics.counter("serving.requests.failed")
+    faults = faults if faults is not None else NULL_FAULTS
+    if faults.enabled:
+        faults.bind(metrics=metrics, sleep=None)
     queue = RequestQueue(policy, clock=clock, metrics=metrics)
     drift = drift if drift is not None else DriftDetector(load_discount=0.5)
     service = service if service is not None else ServiceModel(seed)
@@ -369,6 +384,8 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
     n_arrived = 0
     n_deadline = 0
     violations = 0
+    n_failed = 0
+    failed_deadline = 0
     cold_misses = 0
     refinements = 0
     refined_keys: list[str] = []
@@ -395,9 +412,42 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
             inj_i += 1
 
     def dispatch(req: WorkloadRequest) -> None:
-        nonlocal inflight, busy_until, cold_misses
+        nonlocal inflight, busy_until, cold_misses, n_failed, \
+            failed_deadline
         key, rows = bucket_of(req)
         t_decide = max(clock.now(), busy_until)
+        fault_delay = 0.0
+        if faults.enabled:
+            try:
+                fault_delay += faults.fire("decide")
+                if key not in tuned:
+                    fault_delay += faults.fire("tune.cold")
+                fault_delay += faults.fire("dispatch")
+            except InjectedFault as e:
+                # individual failure: the request terminates here with
+                # an error telemetry sample; the coordinator only pays
+                # the decide overhead, the window slot stays free
+                busy_until = t_decide + decide_s
+                n_failed += 1
+                m_failed.inc()
+                m_requests.inc()
+                viol = (req.deadline_s is not None
+                        and busy_until > req.deadline_s)
+                if req.deadline_s is not None:
+                    failed_deadline += 1
+                if telemetry is not None:
+                    telemetry.append(TelemetrySample(
+                        seq=req.seq, tenant=req.tenant,
+                        workload=req.workload, key=key, backend=backend,
+                        partitions=0, tasks=0, cache_hit=key in tuned,
+                        predicted_s=None, measured_s=None, rel_error=None,
+                        status="failed", error=f"InjectedFault: {e}",
+                        t_enqueue_s=req.arrival_s, t_decide_s=t_decide,
+                        t_retire_s=busy_until,
+                        latency_s=busy_until - req.arrival_s,
+                        deadline_s=req.deadline_s, slo_violation=viol,
+                        queue_depth=len(queue), trace_id=req.trace_id))
+                return
         if key in tuned:
             overhead = decide_s
             cache_hit = True
@@ -413,7 +463,8 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
         load = contention_factor(occupancy, capacity, workers)
         sigma_eff = contention_sigma * (occupancy - 1) / max(1, window - 1)
         base = service.sample(req.workload, rows, z_svc[req.seq])
-        wall = base * load * float(np.exp(sigma_eff * z_load[req.seq]))
+        wall = base * load * float(np.exp(sigma_eff * z_load[req.seq])) \
+            + fault_delay
         sim = _Inflight(req=req, key=key, cache_hit=cache_hit,
                         predicted_s=tuned[key], service_s=wall,
                         load=load, occupancy=occupancy,
@@ -534,7 +585,9 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
         return depths[-1] if depths else 0
 
     slo_denom = n_deadline
-    slo_misses = violations + shed     # shed work IS a missed SLO
+    # shed work IS a missed SLO, and so is an individually failed
+    # request that carried a deadline
+    slo_misses = violations + shed + failed_deadline
     wall = t_end if t_end > 0 else clock.now()
     return {
         "policy": policy,
@@ -543,6 +596,8 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
         "n_requests": n_arrived,
         "completed": len(latencies),
         "shed": shed,
+        "failed": n_failed,
+        "faults_injected": faults.fired if faults.enabled else 0,
         "cold_misses": cold_misses,
         "hit_rate": (1.0 - cold_misses / len(latencies)
                      if latencies else 0.0),
@@ -553,6 +608,7 @@ def simulate_trace(trace: Iterable[WorkloadRequest], *,
             "with_deadline": slo_denom,
             "violations_retired": violations,
             "shed": shed,
+            "failed": failed_deadline,
             "violation_rate": (slo_misses / slo_denom
                                if slo_denom else None),
         },

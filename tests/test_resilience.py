@@ -1,0 +1,659 @@
+"""Serving fault tolerance (PR 8): deterministic fault injection,
+deadline-aware retry, circuit-breaker degradation ladder, corrupt-file
+quarantine round-trips, watchdog reap/requeue, individually-failed
+requests (never a scheduler crash), and the shutdown-path contracts."""
+import json
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+from repro.core.autotuner import TuneResult, TuningCache
+from repro.core.modeling import ModelRegistry, OverlapHeuristicModel
+from repro.core.stream_config import StreamConfig
+from repro.core.workloads import get_workload
+from repro.launch.stats import render
+from repro.serving import (AdaptiveScheduler, BreakerConfig,
+                           CircuitBreaker, ConcurrentScheduler,
+                           DriftDetector, FaultPlan, FaultSpec,
+                           InjectedFault, MetricsRegistry, NULL_FAULTS,
+                           ResiliencePolicy, RetryPolicy, TelemetryLog,
+                           TelemetrySample, WorkloadRequest,
+                           atomic_write_json, call_with_retry,
+                           corrupt_json_file, nearest_bucket_entry,
+                           quarantine_file)
+from repro.serving.clock import VirtualClock
+from repro.serving.traces import TraceConfig, generate_trace, simulate_trace
+
+
+class _ConstModel:
+    """Constant speedup-1.0 predictor (search picks single-stream)."""
+
+    def predict_configs(self, feats, candidates):
+        F = np.atleast_2d(np.asarray(feats))
+        preds = np.ones((F.shape[0], len(candidates)))
+        return preds[0] if np.ndim(feats) == 1 else preds
+
+
+class _RaisingModel:
+    """Primary model whose every prediction dies — the top of the tune
+    ladder is permanently broken."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def predict_configs(self, feats, candidates):
+        self.calls += 1
+        raise RuntimeError("injected model failure")
+
+
+def _req(workload="vecadd", rows=256, seed=0, **kw):
+    wl = get_workload(workload)
+    chunked, shared = wl.make_data(rows, np.random.default_rng(seed))
+    return WorkloadRequest(workload=workload, chunked=chunked,
+                          shared=shared, **kw)
+
+
+def _counter_total(metrics, name):
+    snap = metrics.snapshot()
+    return sum(v["value"] for v in snap.get(name, {}).get("values", []))
+
+
+def _lenient_drift():
+    return DriftDetector(threshold=1e9)
+
+
+# -- fault injection ---------------------------------------------------------
+
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec(site="compile", at=(0,))
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(site="dispatch", kind="segfault", at=(0,))
+    with pytest.raises(ValueError, match="needs at=, every="):
+        FaultSpec(site="dispatch")
+
+
+def test_fault_plan_at_every_times_semantics():
+    plan = FaultPlan([
+        FaultSpec(site="dispatch", at=(1, 3)),
+        FaultSpec(site="retire", every=2, times=2),
+    ]).bind(sleep=None)
+    hits = []
+    for i in range(6):
+        try:
+            plan.fire("dispatch")
+            hits.append(False)
+        except InjectedFault:
+            hits.append(True)
+    assert hits == [False, True, False, True, False, False]
+    # every=2 fires on the 2nd and 4th invocation, then times= caps it
+    retire_hits = []
+    for i in range(8):
+        try:
+            plan.fire("retire")
+            retire_hits.append(False)
+        except InjectedFault:
+            retire_hits.append(True)
+    assert retire_hits == [False, True, False, True, False, False,
+                           False, False]
+    assert plan.invocations("dispatch") == 6
+    assert plan.invocations("retire") == 8
+    assert plan.fired == 4
+
+
+def test_latency_fault_returns_delay_under_virtual_binding():
+    plan = FaultPlan([FaultSpec(site="dispatch", kind="latency",
+                                at=(0,), delay_s=0.25)])
+    slept = []
+    plan.bind(sleep=slept.append)
+    assert plan.fire("dispatch") == 0.25
+    assert slept == [0.25]
+    assert plan.fire("dispatch") == 0.0
+    # sleep=None (virtual-time harness): the delay is returned, nothing
+    # stalls — the simulator charges it to service time
+    plan2 = FaultPlan([FaultSpec(site="dispatch", kind="latency",
+                                 at=(0,), delay_s=0.25)]).bind(sleep=None)
+    assert plan2.fire("dispatch") == 0.25
+
+
+def test_fault_plan_probability_deterministic_across_reset():
+    plan = FaultPlan([FaultSpec(site="decide", probability=0.3)],
+                     seed=7).bind(sleep=None)
+
+    def draw():
+        out = []
+        for _ in range(50):
+            try:
+                plan.fire("decide")
+                out.append(False)
+            except InjectedFault:
+                out.append(True)
+        return out
+
+    first = draw()
+    plan.reset()
+    assert draw() == first
+    assert any(first) and not all(first)
+
+
+def test_fault_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan([
+        FaultSpec(site="dispatch", at=(3, 4), message="outage"),
+        FaultSpec(site="tune.cold", kind="latency", every=10, times=2,
+                  delay_s=0.5),
+    ], seed=3)
+    path = tmp_path / "plan.json"
+    plan.save(path)
+    loaded = FaultPlan.load(path)
+    assert loaded.seed == 3
+    assert loaded.specs == plan.specs
+    assert loaded.enabled
+
+
+def test_fault_plan_counts_injected_metric():
+    metrics = MetricsRegistry()
+    plan = FaultPlan([FaultSpec(site="dispatch", at=(0,))])
+    plan.bind(metrics=metrics, sleep=None)
+    with pytest.raises(InjectedFault):
+        plan.fire("dispatch")
+    assert _counter_total(metrics, "serving.faults.injected") == 1
+
+
+def test_null_faults_is_disabled_noop():
+    assert not NULL_FAULTS.enabled
+    assert NULL_FAULTS.fire("dispatch") == 0.0
+    assert NULL_FAULTS.invocations("dispatch") == 0
+
+
+@pytest.mark.parametrize("mode", ["truncate", "garbage", "empty"])
+def test_corrupt_json_file_defeats_json_load(tmp_path, mode):
+    path = tmp_path / "state.json"
+    path.write_text(json.dumps({"entries": {"k": [1, 2, 3]}} | {
+        "pad": list(range(64))}))
+    corrupt_json_file(path, mode)
+    with pytest.raises((json.JSONDecodeError, UnicodeDecodeError)):
+        json.load(open(path))
+
+
+def test_corrupt_json_file_rejects_unknown_mode(tmp_path):
+    path = tmp_path / "x.json"
+    path.write_text("{}")
+    with pytest.raises(ValueError, match="unknown corruption mode"):
+        corrupt_json_file(path, "bitflip")
+
+
+# -- deadline-aware retry ----------------------------------------------------
+
+
+def test_retry_succeeds_after_transients():
+    calls, slept, recovered = [], [], []
+    policy = RetryPolicy(attempts=3, base_s=0.01, jitter=0.0)
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    out = call_with_retry(flaky, policy=policy,
+                          rng=__import__("random").Random(0),
+                          sleep=slept.append,
+                          on_recover=recovered.append)
+    assert out == "ok"
+    assert len(calls) == 3
+    assert len(slept) == 2
+    assert slept[1] > slept[0]          # exponential growth (no jitter)
+    assert recovered == [2]
+
+
+def test_retry_exhausts_attempts_and_reraises():
+    policy = RetryPolicy(attempts=3, base_s=0.0, jitter=0.0)
+    calls = []
+
+    def dead():
+        calls.append(1)
+        raise ValueError("permanent")
+
+    with pytest.raises(ValueError, match="permanent"):
+        call_with_retry(dead, policy=policy,
+                        rng=__import__("random").Random(0),
+                        sleep=lambda s: None)
+    assert len(calls) == 3
+
+
+def test_retry_deadline_budget_fails_fast_without_sleeping():
+    """A backoff that would land past the request's SLO deadline is
+    pointless — the loop re-raises immediately instead of widening the
+    violation."""
+    clock = VirtualClock(start=10.0)
+    slept = []
+    policy = RetryPolicy(attempts=5, base_s=0.05, jitter=0.0)
+
+    def dead():
+        raise RuntimeError("down")
+
+    with pytest.raises(RuntimeError, match="down"):
+        call_with_retry(dead, policy=policy,
+                        rng=__import__("random").Random(0),
+                        clock=clock, deadline_s=10.01,
+                        sleep=slept.append)
+    assert slept == []                  # zero budget: never slept
+
+
+def test_backoff_jitter_bounds_and_cap():
+    rng = __import__("random").Random(0)
+    policy = RetryPolicy(attempts=5, base_s=0.01, multiplier=2.0,
+                         cap_s=0.03, jitter=0.5)
+    for attempt in range(6):
+        raw = min(0.01 * 2.0 ** attempt, 0.03)
+        for _ in range(20):
+            b = policy.backoff_s(attempt, rng)
+            assert raw <= b <= raw * 1.5 + 1e-12
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+
+def test_breaker_trips_after_k_consecutive_failures():
+    clock = VirtualClock()
+    br = CircuitBreaker(BreakerConfig(k=3, cooldown_s=1.0), clock=clock)
+    key = ("t0", "dispatch")
+    for _ in range(2):
+        br.record_failure(key)
+    assert br.state(key) == "closed" and br.allow(key)
+    br.record_failure(key)
+    assert br.state(key) == "open" and not br.allow(key)
+
+
+def test_breaker_success_resets_consecutive_count():
+    br = CircuitBreaker(BreakerConfig(k=3), clock=VirtualClock())
+    key = ("t0", "tune")
+    br.record_failure(key)
+    br.record_failure(key)
+    br.record_success(key)
+    br.record_failure(key)
+    br.record_failure(key)
+    assert br.state(key) == "closed"    # never 3 *consecutive*
+
+
+def test_breaker_half_open_single_probe_then_recover():
+    clock = VirtualClock()
+    br = CircuitBreaker(BreakerConfig(k=2, cooldown_s=1.0), clock=clock)
+    key = ("t0", "dispatch")
+    br.record_failure(key)
+    br.record_failure(key)
+    assert not br.allow(key)            # open, cooldown not elapsed
+    clock.advance(1.5)
+    assert br.allow(key)                # THE half-open probe
+    assert br.state(key) == "half-open"
+    assert not br.allow(key)            # exactly one outstanding probe
+    br.record_success(key)
+    assert br.state(key) == "closed" and br.allow(key)
+    states = [s for _, k, s in br.events if k == key]
+    assert states == ["open", "half-open", "closed"]
+
+
+def test_breaker_half_open_failure_reopens():
+    clock = VirtualClock()
+    br = CircuitBreaker(BreakerConfig(k=2, cooldown_s=1.0), clock=clock)
+    key = ("t0", "dispatch")
+    br.record_failure(key)
+    br.record_failure(key)
+    clock.advance(1.5)
+    assert br.allow(key)
+    br.record_failure(key)
+    assert br.state(key) == "open"
+    assert not br.allow(key)            # cooldown restarted at reopen
+    clock.advance(1.5)
+    assert br.allow(key)
+
+
+def test_breaker_exports_state_gauge_and_opened_counter():
+    metrics = MetricsRegistry()
+    clock = VirtualClock()
+    br = CircuitBreaker(BreakerConfig(k=1, cooldown_s=1.0),
+                        clock=clock, metrics=metrics)
+    br.record_failure(("acme", "dispatch"))
+    snap = metrics.snapshot()
+    entries = snap["serving.breaker.state"]["values"]
+    assert entries[0]["labels"] == {"tenant": "acme", "stage": "dispatch"}
+    assert entries[0]["value"] == 2     # 2 == open
+    assert _counter_total(metrics, "serving.breaker.opened") == 1
+    # the stats CLI renders the block without raising
+    out = render([], snap)
+    assert "== resilience ==" in out and "breaker" in out and "open" in out
+
+
+# -- nearest-bucket fallback + crash-safe persistence ------------------------
+
+
+def _cache_with_bucket(cache, rows, config, workload="vecadd",
+                       backend="host-sync", seed=0):
+    wl = get_workload(workload)
+    chunked, shared = wl.make_data(rows, np.random.default_rng(seed))
+    key = TuningCache.key(workload, chunked, shared, backend)
+    cache.put(key, TuneResult(config, 1.2, 0.0, 0.0, backend=backend))
+    return key
+
+
+def test_nearest_bucket_borrows_closest_comparable_bucket():
+    cache = TuningCache()
+    _cache_with_bucket(cache, 1024, StreamConfig(partitions=2, tasks=2))
+    _cache_with_bucket(cache, 8192, StreamConfig(partitions=4, tasks=4))
+    wl = get_workload("vecadd")
+    chunked, shared = wl.make_data(512, np.random.default_rng(1))
+    want = TuningCache.key("vecadd", chunked, shared, "host-sync")
+    got = nearest_bucket_entry(cache, want, n_rows=512)
+    assert got is not None
+    assert got.config == StreamConfig(partitions=2, tasks=2)  # 1024 wins
+
+
+def test_nearest_bucket_respects_feasibility_and_key_prefix():
+    cache = TuningCache()
+    # the only comparable bucket needs 64 rows split — infeasible at 16
+    _cache_with_bucket(cache, 1024, StreamConfig(partitions=8, tasks=8))
+    # different workload: never comparable
+    _cache_with_bucket(cache, 1024, StreamConfig(partitions=2, tasks=2),
+                       workload="dotprod")
+    wl = get_workload("vecadd")
+    chunked, shared = wl.make_data(16, np.random.default_rng(1))
+    want = TuningCache.key("vecadd", chunked, shared, "host-sync")
+    assert nearest_bucket_entry(cache, want, n_rows=16) is None
+    assert nearest_bucket_entry(None, want, n_rows=16) is None
+
+
+def test_atomic_write_json_replaces_and_leaves_no_tmp(tmp_path):
+    path = tmp_path / "state.json"
+    path.write_text(json.dumps({"old": True}))
+    atomic_write_json(path, {"new": [1, 2, 3]})
+    assert json.loads(path.read_text()) == {"new": [1, 2, 3]}
+    assert not os.path.exists(str(path) + ".tmp")
+
+
+def test_quarantine_file_collision_naming(tmp_path):
+    path = tmp_path / "cache.json"
+    path.write_text("not json")
+    first = quarantine_file(path)
+    assert first.endswith(".corrupt") and os.path.exists(first)
+    path.write_text("still not json")
+    second = quarantine_file(path)
+    assert second != first and os.path.exists(second)
+    assert not path.exists()
+
+
+def test_corrupt_cache_quarantine_and_rebuild_roundtrip(tmp_path):
+    path = tmp_path / "tuning.json"
+    cache = TuningCache()
+    key = _cache_with_bucket(cache, 1024,
+                             StreamConfig(partitions=2, tasks=2))
+    cache.save(str(path))
+    corrupt_json_file(path, "truncate")
+    with pytest.warns(UserWarning, match="unreadable tuning cache"):
+        fresh = TuningCache(str(path))
+    assert len(fresh) == 0
+    assert fresh.quarantined is not None
+    assert os.path.exists(fresh.quarantined)
+    # the rebuilt cache persists and round-trips on the SAME path
+    _cache_with_bucket(fresh, 1024, StreamConfig(partitions=2, tasks=2))
+    fresh.save()
+    again = TuningCache(str(path))
+    assert again.peek(key) is not None and again.quarantined is None
+
+
+# -- registry dangling-latest fallback (satellite) ---------------------------
+
+
+def test_dangling_latest_falls_back_to_newest_resolvable(tmp_path):
+    metrics = MetricsRegistry()
+    reg = ModelRegistry(tmp_path, metrics=metrics)
+    reg.publish(OverlapHeuristicModel())
+    v2 = reg.publish(OverlapHeuristicModel())
+    # a tenant fork is a DIFFERENT lineage — must not be the fallback
+    reg.publish(OverlapHeuristicModel(), tenant="acme")
+    v3 = reg.publish(OverlapHeuristicModel())
+    shutil.rmtree(tmp_path / v3)        # latest now dangles at v3
+    with pytest.warns(UserWarning, match="falling back"):
+        model, manifest = reg.load("latest")
+    assert manifest["artifact_id"] == v2
+    assert isinstance(model, OverlapHeuristicModel)
+    assert _counter_total(metrics, "serving.registry.latest_fallback") == 1
+
+
+def test_dangling_latest_with_no_surviving_artifact_still_raises(tmp_path):
+    reg = ModelRegistry(tmp_path)
+    aid = reg.publish(OverlapHeuristicModel())
+    shutil.rmtree(tmp_path / aid)
+    with pytest.raises(RuntimeError, match="points at"):
+        reg.load("latest")
+
+
+# -- resilient serial scheduler ----------------------------------------------
+
+
+def _resilient_scheduler(model=None, *, backend="host-sync", faults=None,
+                         policy=None, **kw):
+    return AdaptiveScheduler(
+        model if model is not None else _ConstModel(),
+        backend=backend, drift=_lenient_drift(), faults=faults,
+        resilience=policy if policy is not None else ResiliencePolicy(
+            retry=RetryPolicy(attempts=3, base_s=1e-4, jitter=0.0)),
+        metrics=MetricsRegistry(), **kw)
+
+
+def test_transient_dispatch_fault_is_retried_and_recovered():
+    faults = FaultPlan([FaultSpec(site="dispatch", at=(0,),
+                                  message="transient dispatch error")])
+    sched = _resilient_scheduler(faults=faults)
+    sched.submit_all([_req(seed=i) for i in range(2)])
+    results = sched.run()
+    assert [r.status for r in results] == ["served", "served"]
+    assert all(len(r.outputs) for r in results)
+    assert sched.stats.get("failed", 0) == 0
+    assert _counter_total(sched.metrics, "serving.faults.recovered") >= 1
+    sched.close()
+
+
+def test_dispatch_outage_fails_requests_individually():
+    """An outage longer than the retry budget on a backend with no
+    fallback (host-sync IS the fallback) must fail that request alone:
+    an error telemetry sample with status/error set, and run() returns
+    normally for everything else."""
+    faults = FaultPlan([FaultSpec(site="dispatch", at=(0, 1, 2),
+                                  message="injected outage")])
+    sched = _resilient_scheduler(faults=faults)
+    sched.submit_all([_req(seed=i) for i in range(3)])
+    results = sched.run()
+    assert [r.status for r in results] == ["failed", "served", "served"]
+    failed = results[0]
+    assert failed.measured_s is None and failed.outputs == []
+    assert "InjectedFault" in failed.error and "outage" in failed.error
+    assert failed.sample.status == "failed"
+    summary = sched.telemetry.summary()
+    assert summary["by_status"] == {"failed": 1, "ok": 2}
+    assert sched.stats["failed"] == 1
+    sched.close()
+
+
+def test_dispatch_steps_down_to_host_sync_fallback():
+    faults = FaultPlan([FaultSpec(site="dispatch", at=(0, 1, 2),
+                                  message="primary backend down")])
+    sched = _resilient_scheduler(backend="host-threads", faults=faults)
+    sched.submit_all([_req(seed=0)])
+    (r,) = sched.run()
+    assert r.status == "degraded"
+    assert r.sample.degraded_via == "backend"
+    assert len(r.outputs) and r.measured_s is not None
+    assert _counter_total(sched.metrics, "serving.faults.degraded") == 1
+    sched.close()
+
+
+def test_tune_ladder_falls_to_heuristic_and_breaker_opens():
+    """Primary model permanently broken: every cold tune steps down to
+    the heuristic (requests still serve, marked degraded), and after k
+    consecutive failures the (tenant, tune) breaker opens so the dead
+    primary stops being retried at all."""
+    raising = _RaisingModel()
+    sched = _resilient_scheduler(
+        raising,
+        policy=ResiliencePolicy(
+            retry=RetryPolicy(attempts=3, base_s=1e-4, jitter=0.0),
+            breaker=BreakerConfig(k=2, cooldown_s=1e9)))
+    # three different shape buckets -> three cold tunes
+    sched.submit_all([_req(rows=r, seed=i)
+                      for i, r in enumerate((256, 1024, 4096))])
+    results = sched.run()
+    assert [r.status for r in results] == ["degraded"] * 3
+    assert {r.sample.degraded_via for r in results} == {"heuristic-model"}
+    assert all(len(r.outputs) for r in results)
+    assert sched.breaker.state(("default", "tune")) == "open"
+    # requests 1-2 each burn the 3-attempt retry budget; request 3 finds
+    # the breaker open and never touches the primary
+    assert raising.calls == 6
+    sched.close()
+
+
+# -- resilient concurrent engine ---------------------------------------------
+
+
+def test_concurrent_engine_survives_dispatch_errors():
+    faults = FaultPlan([FaultSpec(site="dispatch", every=1, times=6,
+                                  message="flaky dispatch")])
+    eng = ConcurrentScheduler(
+        _ConstModel(), window=2, drift=_lenient_drift(), faults=faults,
+        resilience=ResiliencePolicy(
+            retry=RetryPolicy(attempts=3, base_s=1e-4, jitter=0.0)),
+        metrics=MetricsRegistry())
+    n = 5
+    eng.submit_all([_req(seed=i) for i in range(n)])
+    results = eng.run()
+    assert len(results) == n
+    assert all(r.status in ("served", "degraded", "failed")
+               for r in results)
+    assert eng.stats["failed"] >= 1
+    assert sum(r.status != "failed" for r in results) >= 1
+    assert eng.retirer.held == 0        # nothing wedged in the retirer
+    eng.close()
+
+
+def test_watchdog_reaps_hung_dispatch_and_requeue_serves():
+    faults = FaultPlan([FaultSpec(site="dispatch", kind="latency",
+                                  at=(0,), delay_s=0.4)])
+    eng = ConcurrentScheduler(
+        _ConstModel(), window=2, workers=2, drift=_lenient_drift(),
+        faults=faults,
+        resilience=ResiliencePolicy(watchdog_s=0.08),
+        metrics=MetricsRegistry())
+    eng.submit_all([_req(seed=0)])
+    (r,) = eng.run()
+    assert r.status == "served" and len(r.outputs)
+    assert eng.stats["watchdog_fired"] == 1
+    assert _counter_total(eng.metrics, "serving.watchdog.fired") == 1
+    eng.close()                         # joins the abandoned zombie
+
+
+def test_watchdog_requeue_exhausted_times_out_individually():
+    faults = FaultPlan([FaultSpec(site="dispatch", kind="latency",
+                                  at=(0, 1), delay_s=0.3)])
+    eng = ConcurrentScheduler(
+        _ConstModel(), window=2, workers=2, drift=_lenient_drift(),
+        faults=faults,
+        resilience=ResiliencePolicy(watchdog_s=0.05),
+        metrics=MetricsRegistry())
+    eng.submit_all([_req(seed=0)])
+    (r,) = eng.run()
+    assert r.status == "timeout"
+    assert "watchdog" in r.error
+    assert r.sample.status == "timeout" and r.sample.measured_s is None
+    assert eng.stats["watchdog_fired"] == 2
+    eng.close()
+
+
+# -- telemetry contracts + shutdown paths (satellites) -----------------------
+
+
+def _failed_sample(seq, **kw):
+    return TelemetrySample(seq=seq, tenant="t", workload="vecadd",
+                           key="k", backend="host-sync", partitions=0,
+                           tasks=0, cache_hit=False, predicted_s=None,
+                           measured_s=None, rel_error=None,
+                           status="failed", error="RuntimeError: boom",
+                           **kw)
+
+
+def test_summary_with_all_requests_failed_is_none_shaped():
+    log = TelemetryLog()
+    for i in range(4):
+        log.append(_failed_sample(i))
+    s = log.summary()
+    assert s["requests"] == 4
+    assert s["latency"] is None
+    assert s["total_measured_s"] == 0.0
+    assert s["mean_rel_error"] is None
+    assert s["slo_violation_rate"] is None
+    assert s["by_status"] == {"failed": 4}
+    # the stats CLI renders an all-failed window without raising
+    out = render(log.samples)
+    assert "failed 4" in out and "(no retired requests)" in out
+
+
+def test_telemetry_close_idempotent_never_fsyncs_closed_file(
+        tmp_path, monkeypatch):
+    import repro.serving.telemetry as telemetry_mod
+    fsyncs = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(telemetry_mod.os, "fsync",
+                        lambda fd: (fsyncs.append(fd), real_fsync(fd)))
+    log = TelemetryLog(str(tmp_path / "t.jsonl"))
+    log.append(_failed_sample(0))
+    log.close()
+    assert log.closed and len(fsyncs) == 1
+    log.close()                         # double-close: no second fsync,
+    log.close()                         # no ValueError on a closed fd
+    assert len(fsyncs) == 1
+    # append after close reopens the sink (append-only file mode)
+    log.append(_failed_sample(1))
+    log.close()
+    assert len(TelemetryLog.read(str(tmp_path / "t.jsonl"))) == 2
+
+
+def test_scheduler_close_is_idempotent_and_safe_mid_flight(tmp_path):
+    sched = AdaptiveScheduler(
+        _ConstModel(), drift=_lenient_drift(),
+        telemetry=TelemetryLog(str(tmp_path / "t.jsonl")))
+    sched.submit_all([_req(seed=i) for i in range(2)])
+    sched.run(max_requests=1)           # one request still queued
+    sched.close()
+    assert sched.telemetry.closed
+    sched.close()                       # idempotent
+    eng = ConcurrentScheduler(_ConstModel(), window=2,
+                              drift=_lenient_drift())
+    eng.submit_all([_req(seed=0)])
+    eng.run()
+    eng.close()
+    eng.close()                         # pool shutdown is idempotent too
+
+
+# -- virtual-clock trace harness under faults --------------------------------
+
+
+def test_simulate_trace_with_faults_is_deterministic():
+    cfg = TraceConfig(n_requests=800, seed=5, arrival="bursty")
+    specs = [FaultSpec(site="dispatch", at=tuple(range(40, 52)),
+                       message="outage"),
+             FaultSpec(site="dispatch", kind="latency", every=97,
+                       delay_s=0.2)]
+
+    def run():
+        return simulate_trace(generate_trace(cfg), policy="fifo", seed=5,
+                              faults=FaultPlan(specs, seed=5))
+
+    a, b = run(), run()
+    assert a == b
+    assert a["failed"] > 0
+    assert a["faults_injected"] > 0
+    clean = simulate_trace(generate_trace(cfg), policy="fifo", seed=5)
+    assert clean["failed"] == 0
+    assert clean["completed"] >= a["completed"]
