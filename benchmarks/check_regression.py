@@ -3,7 +3,7 @@ JSON against the committed baseline and fail CI on a real regression.
 
     python benchmarks/check_regression.py FRESH BASELINE [--tolerance 0.25]
 
-Works on all six benchmark artifacts:
+Works on all the benchmark artifacts:
 
   BENCH_serving.json  (``--serve-concurrent``)  gated on
       ``capacity_fraction`` — the engine's speedup normalized by the SAME
@@ -35,6 +35,13 @@ Works on all six benchmark artifacts:
       ``chaos_slo_violation_delta`` from the fault-injected run of the
       real engine under the committed schedule
       (``benchmarks/data/chaos_faults.json``).
+  BENCH_fleet.json    (``--serve-fleet``)       gated on
+      ``fleet_scaling_fraction`` — N-worker-process speedup normalized
+      by min(N, the same run's measured capacity ceiling), the
+      multi-process twin of ``capacity_fraction`` — plus two exact-zero
+      gates: ``fleet_worker_crashes`` (unplanned worker deaths) and
+      ``fleet_kill_lost_requests`` (requests not terminal after the
+      SIGKILL + respawn drill), and ``fleet_kill_terminal_fraction``.
   BENCH_overhead.json (``--serve-real-trace``)  gated on
       ``python_overhead_fraction`` — coordinator decide+retire wall over
       total wall in the real-engine replay (lower is better).  A ratio
@@ -56,6 +63,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 # metric name -> (direction, description); direction is "higher" when
@@ -103,15 +111,37 @@ GATED_METRICS = {
                   "the same run fault-free; gate loosely (thread-timing "
                   "noise), it exists to catch retry storms and "
                   "unrecovered breakers"),
+    "fleet_scaling_fraction":
+        ("higher", "N-worker-process fleet speedup / min(N, measured "
+                   "parallel-capacity ceiling) — the same-run "
+                   "normalization that cancels shared-host drift"),
+    "fleet_worker_crashes":
+        ("lower", "UNplanned worker-process deaths across the fleet "
+                  "scaling runs (baseline 0 == exact-zero gate; "
+                  "injected SIGKILLs are excluded)"),
+    "fleet_kill_lost_requests":
+        ("lower", "requests that never reached a terminal status after "
+                  "a mid-trace SIGKILL + respawn (baseline 0 == "
+                  "exact-zero gate: handoff must requeue everything)"),
+    "fleet_kill_terminal_fraction":
+        ("higher", "admitted requests reaching a terminal status in the "
+                   "SIGKILL drill — the fleet twin of "
+                   "chaos_terminal_fraction"),
 }
 
 # context printed next to the verdict but never gated (absolute numbers
 # that legitimately drift with the shared host)
-INFO_METRICS = ("speedup", "parallel_capacity", "wall_s")
+INFO_METRICS = ("speedup", "fleet_speedup", "parallel_capacity", "wall_s")
 
 
-def gate(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
-    """Returns a list of failure messages (empty == gate passes)."""
+def gate(fresh: dict, baseline: dict, tolerance: float,
+         rows: list | None = None) -> list[str]:
+    """Returns a list of failure messages (empty == gate passes).
+
+    ``rows``, when given, collects one
+    ``{metric, fresh, baseline, bound, verdict, description}`` dict per
+    gated metric — the structured form the CI step-summary table is
+    rendered from (stdout keeps the full-precision log lines)."""
     shared = [m for m in GATED_METRICS if baseline.get(m) is not None]
     if not shared:
         return [f"baseline has none of the gated metrics "
@@ -124,6 +154,10 @@ def gate(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
             # too short to serve every tenant leaves regret undefined)
             failures.append(f"{metric}: missing from fresh results "
                             f"(baseline {base:.3f})")
+            if rows is not None:
+                rows.append({"metric": metric, "fresh": None,
+                             "baseline": base, "bound": None,
+                             "verdict": "MISSING", "description": desc})
             continue
         got = float(fresh[metric])
         if direction == "higher":
@@ -137,16 +171,54 @@ def gate(fresh: dict, baseline: dict, tolerance: float) -> list[str]:
         verdict = "REGRESSION" if bad else "OK"
         print(f"  {metric:38s} fresh={got:9.4f}  baseline={base:9.4f}  "
               f"{kind}={bound:9.4f}  {verdict}   ({desc})")
+        if rows is not None:
+            rows.append({"metric": metric, "fresh": got, "baseline": base,
+                         "bound": bound, "verdict": verdict,
+                         "description": f"{kind} ({direction} is better)"})
         if bad:
             failures.append(
                 f"{metric}: {got:.4f} {rel} {bound:.4f} "
                 f"(baseline {base:.4f} {'-' if direction == 'higher' else '+'}"
                 f" {tolerance:.0%})")
     for metric in INFO_METRICS:
-        if metric in fresh and metric in baseline:
+        if metric in fresh and metric in baseline \
+                and isinstance(fresh[metric], (int, float)) \
+                and isinstance(baseline[metric], (int, float)):
             print(f"  {metric:20s} fresh={float(fresh[metric]):7.3f}  "
                   f"baseline={float(baseline[metric]):7.3f}  (info only)")
     return failures
+
+
+def _fmt(v) -> str:
+    return f"{v:.4f}" if isinstance(v, float) else str(v)
+
+
+def write_step_summary(title: str, rows: list, failures: list[str],
+                       path: str) -> None:
+    """Append a markdown pass/fail table to ``$GITHUB_STEP_SUMMARY`` —
+    one header line + one row per gated metric, so a red gate is
+    readable from the Actions summary page without opening raw logs."""
+    lines = [f"### {title}", ""]
+    lines.append("| metric | fresh | baseline | bound | verdict |")
+    lines.append("|---|---|---|---|---|")
+    for r in rows:
+        icon = {"OK": "✅", "REGRESSION": "❌",
+                "MISSING": "❓"}.get(r["verdict"], "")
+        lines.append(
+            f"| `{r['metric']}` "
+            f"| {_fmt(r['fresh']) if r['fresh'] is not None else '—'} "
+            f"| {_fmt(r['baseline'])} "
+            f"| {_fmt(r['bound']) if r['bound'] is not None else '—'} "
+            f"| {icon} {r['verdict']} |")
+    lines.append("")
+    if failures:
+        tripped = ", ".join(f"`{f.split(':', 1)[0]}`" for f in failures)
+        lines.append(f"**GATE FAILED** — tripped: {tripped}")
+    else:
+        lines.append("Gate passed.")
+    lines.append("")
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main() -> int:
@@ -165,10 +237,23 @@ def main() -> int:
 
     print(f"bench-regression gate: {args.fresh} vs {args.baseline} "
           f"(tolerance {args.tolerance:.0%})")
-    failures = gate(fresh, baseline, args.tolerance)
+    rows: list = []
+    failures = gate(fresh, baseline, args.tolerance, rows=rows)
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        write_step_summary(
+            f"{os.path.basename(args.fresh)} vs "
+            f"{os.path.basename(args.baseline)} "
+            f"(tolerance {args.tolerance:.0%})",
+            rows, failures, summary_path)
     if failures:
         for msg in failures:
             print(f"FAIL: {msg}", file=sys.stderr)
+        # name the exact tripped metrics in the last line, so the step's
+        # one-line failure annotation says WHAT regressed, not just that
+        # something did
+        tripped = ", ".join(sorted({f.split(":", 1)[0] for f in failures}))
+        print(f"REGRESSION GATE FAILED on: {tripped}", file=sys.stderr)
         return 1
     print("gate passed")
     return 0

@@ -347,6 +347,86 @@ def adaptive_serve(
     return summary
 
 
+def fleet_serve(
+    workloads: Sequence[str] = DEFAULT_ADAPTIVE_WORKLOADS,
+    *,
+    n_requests: int = 16,
+    worker_procs: int = 2,
+    window: int = 2,
+    backend: str = "host-sync",
+    policy: str = "fifo",
+    tenants: int = 8,
+    model: str = "latest",
+    model_dir=None,
+    telemetry_path: Optional[str] = None,
+    cache_path: Optional[str] = None,
+    metrics_out: Optional[str] = None,
+    drift_threshold: float = 4.0,
+    seed: int = 0,
+    verbose: bool = True,
+) -> dict:
+    """Serve a mixed multi-tenant trace through the fleet router:
+    ``worker_procs`` spawn-isolated worker processes, each running its
+    own :class:`~repro.serving.ConcurrentScheduler` with ``window``
+    requests in flight, tenants sharded stably across them (README
+    "Fleet serving").
+
+    The model spec is resolved *once* here (bootstrap-training if the
+    registry is empty, exactly like single-process serving) and the
+    pinned artifact id is what ships to the workers — N processes load
+    one immutable registry version instead of racing ``latest``.
+    Returns the merged fleet summary: worker-labeled telemetry
+    aggregates, a ``per_worker`` breakdown, respawn/death counters, and
+    (when ``metrics_out`` is set) the merged worker-labeled metrics
+    snapshot, which ``repro.launch.stats --metrics`` renders unchanged.
+    """
+    from repro.serving import make_trace
+    from repro.serving.fleet import FleetRouter, WorkerConfig
+
+    model_obj, model_info = resolve_serving_model(
+        model, model_dir, verbose=verbose)
+    del model_obj                     # workers load their own copy
+    spec = (model_info["artifact_id"]
+            if model_info["kind"] != "heuristic" else "heuristic")
+    occurrences = -(-n_requests // len(workloads))  # ceil
+    trace = make_trace(list(workloads), occurrences=occurrences,
+                       tenants=max(tenants, 1), seed=seed)[:n_requests]
+    cfg = WorkerConfig(backend=backend, window=window, model=spec,
+                       model_dir=model_dir, drift_threshold=drift_threshold,
+                       cache_path=cache_path)
+    t0 = time.perf_counter()
+    with FleetRouter(worker_procs, worker=cfg, policy=policy,
+                     telemetry_path=telemetry_path) as router:
+        router.submit_all(trace)
+        results = router.run()
+        if verbose:
+            for r in results:
+                cfg_s = ("x".join(map(str, r["config"]))
+                         if r["config"] else "-")
+                meas = (f"{r['measured_s']*1e6:8.0f}us"
+                        if r["measured_s"] is not None else "        -")
+                print(f"  {r['sample'].get('worker', '?'):3s} "
+                      f"{r['tenant']:10s} {r['workload']:12s} {cfg_s:8s} "
+                      f"{'hit ' if r['cache_hit'] else 'cold'} "
+                      f"measured={meas} {r['status']}", file=sys.stderr)
+        wall = time.perf_counter() - t0
+    summary = router.summary()
+    summary["wall_s"] = wall
+    summary["backend"] = backend
+    summary["policy"] = policy
+    summary["model"] = model_info
+    summary["window"] = window
+    summary["worker_procs"] = worker_procs
+    summary["throughput_rps"] = len(results) / max(wall, 1e-12)
+    if metrics_out:
+        from repro.serving.resilience import atomic_write_json
+        atomic_write_json(metrics_out, router.metrics_snapshot())
+        if verbose:
+            print(f"merged fleet metrics -> {metrics_out}",
+                  file=sys.stderr)
+    return summary
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=list_archs(),
@@ -376,6 +456,12 @@ def main() -> None:
                          "the concurrent engine")
     ap.add_argument("--workers", type=int, default=None,
                     help="concurrent engine pool size (default: window)")
+    ap.add_argument("--worker-procs", type=int, default=0,
+                    help="serve through the fleet router with this many "
+                         "worker PROCESSES (tenant-sharded, respawn on "
+                         "death; implies --adaptive).  Each worker runs "
+                         "its own concurrent engine with --window "
+                         "requests in flight; 0 = single-process")
     ap.add_argument("--tenants", type=int, default=0,
                     help="serve N isolated tenants (per-tenant cache "
                          "namespace, drift windows, model fork on "
@@ -409,6 +495,21 @@ def main() -> None:
                          "injection (implies --resilience; see "
                          "benchmarks/data/chaos_faults.json)")
     args = ap.parse_args()
+
+    if args.worker_procs and args.worker_procs > 0:
+        summary = fleet_serve(
+            args.workloads.split(","),
+            n_requests=args.requests,
+            worker_procs=args.worker_procs,
+            window=max(args.window, 2), backend=args.backend,
+            policy=args.policy,
+            tenants=args.tenants if args.tenants > 0 else 8,
+            model=args.model, model_dir=args.model_dir,
+            telemetry_path=args.telemetry,
+            cache_path=args.tuning_cache,
+            metrics_out=args.metrics_out)
+        print(json.dumps(summary, indent=2))
+        return
 
     if args.adaptive:
         summary = adaptive_serve(

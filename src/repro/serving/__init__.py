@@ -19,6 +19,13 @@ calibrated parallel capacity).  ``isolate_tenants=True`` gives every
 tenant its own cache namespace, drift windows, and — on first refit — a
 private fork of the shared base model (``tenancy.py``).
 
+Fleet serving (``fleet/``): :class:`FleetRouter` shards tenants across
+N spawn-isolated worker processes (each one a private
+``ConcurrentScheduler`` + tuning cache + telemetry/metrics stream),
+respawns dead workers and requeues their un-acked work, and merges the
+per-worker streams into one worker-labeled fleet view (README "Fleet
+serving").
+
 Fault tolerance (``resilience/``): pass ``resilience=ResiliencePolicy()``
 to either scheduler for deadline-aware retries, a per-(tenant, stage)
 circuit breaker over the degradation ladder, an execution watchdog, and
@@ -29,6 +36,8 @@ prove it (README "Resilience").
 from repro.serving.clock import SystemClock, VirtualClock
 from repro.serving.engine import (ConcurrentScheduler, ContextPool,
                                   OrderedRetirer)
+from repro.serving.fleet import (FleetRouter, WorkerConfig, fleet_summary,
+                                 merge_metrics, merge_samples, shard_for)
 from repro.serving.observability import (NULL_METRICS, NULL_TRACER,
                                          HotPathProfiler, MetricsRegistry,
                                          NullMetrics, NullTracer, Tracer,
@@ -61,6 +70,8 @@ __all__ = [
     "AdaptiveScheduler", "OverlapHeuristicModel", "PendingRequest",
     "RequestResult", "make_trace",
     "ConcurrentScheduler", "ContextPool", "OrderedRetirer",
+    "FleetRouter", "WorkerConfig", "shard_for",
+    "merge_samples", "merge_metrics", "fleet_summary",
     "TelemetryLog", "TelemetrySample", "relative_error",
     "TenantContext", "TenantRegistry",
     "Tracer", "NullTracer", "NULL_TRACER",

@@ -1,0 +1,29 @@
+"""Fleet serving: a tenant-sharding router over N worker processes.
+
+The single-process schedulers (:mod:`repro.serving.scheduler`,
+:mod:`repro.serving.engine`) are capped by the GIL and one XLA client;
+the fleet splits the same serving pipeline across processes:
+
+  submit → router admission queue (fifo/priority/fair/deadline)
+         → tenant → worker shard (stable CRC32)
+         → worker process: own ConcurrentScheduler + tuning cache +
+           telemetry + metrics + drift/refinement
+         → results stream back; worker-labeled samples merge into one
+           fleet telemetry log / metrics snapshot
+
+Worker death is handled by respawn-and-requeue (see ``router.py``);
+model versions distribute through the shared ``ModelRegistry`` —
+``FleetRouter.refresh_model("latest")`` makes every worker reload and
+hot-swap the pinned artifact.  Entry points:
+``launch/serve.py --worker-procs N`` and
+``benchmarks/run.py --serve-fleet``.
+"""
+from repro.serving.fleet.aggregate import (fleet_summary, merge_metrics,
+                                           merge_samples)
+from repro.serving.fleet.router import FleetRouter, shard_for
+from repro.serving.fleet.worker import WorkerConfig, worker_main
+
+__all__ = [
+    "FleetRouter", "WorkerConfig", "worker_main", "shard_for",
+    "merge_samples", "merge_metrics", "fleet_summary",
+]

@@ -1,0 +1,224 @@
+"""Fleet worker process: one :class:`ConcurrentScheduler` per process.
+
+``worker_main`` is the spawn target the router launches N of.  Each
+worker builds its own serving stack — model, tuning cache, telemetry
+log, metrics registry, drift detector — so nothing is shared across
+processes except the two ``multiprocessing`` queues: ``task_q`` (router
+→ worker) carries serve batches and control messages, ``result_q``
+(worker → router, one per worker) carries per-request results and the
+lifecycle handshakes.  A dedicated result queue per worker matters for
+crash handling: a SIGKILL mid-``put`` can corrupt a queue's byte
+stream, and with per-worker queues the corruption dies with the worker
+— the router discards the queue on respawn instead of losing the whole
+fleet's result channel.
+
+Wire protocol (plain picklable tuples, first element is the kind):
+
+  router → worker
+    ("serve", [(token, WorkloadRequest), ...])   run a batch
+    ("refresh", spec)                            reload model, swap in
+    ("ping",)                                    liveness probe
+    ("stop",)                                    graceful shutdown
+
+  worker → router
+    ("ready", label, pid, model_tag)             startup handshake
+    ("result", label, token, payload)            one terminal request
+    ("refreshed", label, model_tag, error)       refresh ack
+    ("pong", label)
+    ("bye", label, {"summary", "metrics", "stats"})  shutdown handshake
+    ("fatal", label, error)                      dying; router respawns
+
+``token`` is the router-assigned ``trace_id`` — the worker's own queue
+preserves it (``RequestQueue.push`` only assigns when unset), so results
+map back to router bookkeeping without a shared sequence space.
+
+Workers default to a :class:`ResiliencePolicy`: a bad request fails
+*individually* (terminal ``failed`` result) instead of taking the
+process down.  Anything that still escapes — a scheduler bug, an OOM —
+exits the process nonzero after a best-effort ``fatal`` message, and
+the router's death handler requeues the un-acked work on a respawn:
+crash recovery composes out of per-request resilience inside the
+process and whole-process replacement outside it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import queue as queue_mod
+from typing import Optional
+
+
+@dataclasses.dataclass
+class WorkerConfig:
+    """Per-process serving configuration; must stay picklable (it is
+    shipped to the spawn child as a process argument)."""
+
+    worker_id: int = 0
+    backend: str = "host-sync"
+    #: in-flight window of the per-worker ConcurrentScheduler
+    window: int = 2
+    #: engine thread-pool size (default: window)
+    workers: Optional[int] = None
+    #: model spec — "heuristic", an artifact id, or a registry path.
+    #: Pass a *pinned* artifact id rather than "latest": workers resolve
+    #: with ``bootstrap=False`` so N processes never race to train
+    model: str = "heuristic"
+    model_dir: Optional[str] = None
+    drift_threshold: float = 4.0
+    #: per-worker tuning-cache JSON path (None = in-memory only); the
+    #: router derives distinct paths per slot so namespaces never collide
+    cache_path: Optional[str] = None
+    #: per-worker telemetry JSONL path (None = in-memory; the router
+    #: aggregates the merged fleet stream either way)
+    telemetry_path: Optional[str] = None
+    #: arm ResiliencePolicy: bad requests fail individually instead of
+    #: killing the process
+    resilience: bool = True
+    #: load-aware drift capacity.  Fleet workers share one host, so a
+    #: per-process thread-scaling probe would both slow startup and
+    #: measure its neighbors; 1.0 disables within-worker load
+    #: normalization (None = probe, as single-process serving does)
+    capacity: Optional[float] = 1.0
+    keep_outputs: bool = False
+
+    @property
+    def label(self) -> str:
+        return f"w{self.worker_id}"
+
+
+def _build_scheduler(cfg: WorkerConfig):
+    """The worker's private serving stack.  Imports live here, not at
+    module top: the spawn child pays them once, and the router process
+    can import this module's dataclass without dragging in jax."""
+    from repro.core.autotuner import TuningCache
+    from repro.launch.serve import resolve_serving_model
+    from repro.serving import (ConcurrentScheduler, DriftDetector,
+                               MetricsRegistry, ResiliencePolicy,
+                               TelemetryLog)
+
+    model, info = resolve_serving_model(
+        cfg.model, cfg.model_dir, bootstrap=False, verbose=False)
+    sched = ConcurrentScheduler(
+        model,
+        window=cfg.window,
+        workers=cfg.workers,
+        capacity=cfg.capacity,
+        backend=cfg.backend,
+        policy="fifo",                 # admission ordering is the router's
+        cache=TuningCache(cfg.cache_path),
+        telemetry=TelemetryLog(cfg.telemetry_path),
+        drift=DriftDetector(threshold=cfg.drift_threshold,
+                            load_discount=0.5),
+        model_tag=info["artifact_id"],
+        keep_outputs=cfg.keep_outputs,
+        metrics=MetricsRegistry(),
+        resilience=ResiliencePolicy() if cfg.resilience else None)
+    return sched, info["artifact_id"]
+
+
+def _light_result(r, label: str) -> dict:
+    """Strip a RequestResult for the wire: the request's numpy payload
+    stays in the worker (the router kept its own copy for requeue), only
+    the decision/outcome/telemetry crosses back."""
+    sample = r.sample
+    sample.worker = label
+    return {
+        "status": r.status,
+        "error": r.error,
+        "workload": r.request.workload,
+        "tenant": r.request.tenant,
+        "config": ([r.config.partitions, r.config.tasks]
+                   if r.config is not None else None),
+        "measured_s": r.measured_s,
+        "predicted_s": r.predicted_s,
+        "cache_hit": r.cache_hit,
+        "refined": r.refined,
+        "sample": sample.to_json(),
+    }
+
+
+def _drain_serve(task_q, batch: list):
+    """Greedily fold queued-up serve messages into one batch so the
+    engine sees a full window instead of chunk-sized trickles; the first
+    non-serve message ends the drain and is returned for handling."""
+    while True:
+        try:
+            msg = task_q.get_nowait()
+        except queue_mod.Empty:
+            return batch, None
+        if msg[0] == "serve":
+            batch.extend(msg[1])
+        else:
+            return batch, msg
+
+
+def _serve_batch(sched, label: str, batch, result_q) -> None:
+    for _token, req in batch:
+        sched.submit(req)
+    for r in sched.run():
+        # token == the router-assigned trace_id, preserved by push()
+        result_q.put(("result", label, r.request.trace_id,
+                      _light_result(r, label)))
+
+
+def _refresh(sched, cfg: WorkerConfig, spec: str):
+    from repro.launch.serve import resolve_serving_model
+    model, info = resolve_serving_model(
+        spec, cfg.model_dir, bootstrap=False, verbose=False)
+    sched.swap_model(model, model_tag=info["artifact_id"])
+    return info["artifact_id"]
+
+
+def worker_main(cfg: WorkerConfig, task_q, result_q) -> None:
+    """Spawn-target serving loop (must live in an importable module —
+    spawn re-imports the target by qualified name, so a closure or
+    ``__main__`` function would break under pytest and ``-m`` entry
+    points)."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    label = cfg.label
+    try:
+        sched, model_tag = _build_scheduler(cfg)
+    except BaseException as e:  # noqa: BLE001 — report, then die loudly
+        result_q.put(("fatal", label, f"{type(e).__name__}: {e}"))
+        raise SystemExit(1)
+    result_q.put(("ready", label, os.getpid(), model_tag))
+
+    try:
+        pending_ctrl = None
+        while True:
+            msg = pending_ctrl if pending_ctrl is not None else task_q.get()
+            pending_ctrl = None
+            kind = msg[0]
+            if kind == "stop":
+                break
+            if kind == "serve":
+                batch, pending_ctrl = _drain_serve(task_q, list(msg[1]))
+                _serve_batch(sched, label, batch, result_q)
+            elif kind == "refresh":
+                try:
+                    tag = _refresh(sched, cfg, msg[1])
+                    result_q.put(("refreshed", label, tag, None))
+                except Exception as e:  # noqa: BLE001 — keep serving on
+                    # a bad publish; the old model stays live
+                    result_q.put(("refreshed", label, None,
+                                  f"{type(e).__name__}: {e}"))
+            elif kind == "ping":
+                result_q.put(("pong", label))
+    except BaseException as e:  # noqa: BLE001 — anything past the
+        # per-request resilience barrier is process-fatal: report, exit
+        # nonzero, let the router respawn and requeue un-acked work
+        result_q.put(("fatal", label, f"{type(e).__name__}: {e}"))
+        raise SystemExit(1)
+
+    # graceful goodbye: ship the per-worker aggregates for the fleet
+    # merge, then tear down (telemetry close fsyncs the JSONL)
+    result_q.put(("bye", label, {
+        "summary": sched.telemetry.summary(),
+        "metrics": sched.metrics.snapshot(),
+        "stats": dict(sched.stats),
+    }))
+    if cfg.cache_path:
+        sched.cache.save()
+    sched.close()
+    result_q.close()
+    result_q.join_thread()

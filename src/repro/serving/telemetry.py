@@ -82,6 +82,11 @@ class TelemetrySample:
     #: key (repro.serving.observability); stable across out-of-order
     #: retirement in the concurrent engine
     trace_id: Optional[str] = None
+    # -- fleet serving (multi-process router/worker split) -----------------
+    #: worker-process label ("w0", "w1", ...) under the fleet router;
+    #: None for single-process serving.  ``from_json`` filters unknown
+    #: keys, so pre-fleet JSONL streams load unchanged
+    worker: Optional[str] = None
 
     def to_json(self) -> dict:
         return dataclasses.asdict(self)
