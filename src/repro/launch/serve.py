@@ -451,9 +451,10 @@ def main() -> None:
                     help="append-only JSONL telemetry path")
     ap.add_argument("--tuning-cache", default=None,
                     help="persistent tuning-cache JSON path")
-    ap.add_argument("--window", type=int, default=1,
+    ap.add_argument("--window", type=int, default=None,
                     help="in-flight request window; >1 serves through "
-                         "the concurrent engine")
+                         "the concurrent engine (default: 1, or 2 per "
+                         "worker under --worker-procs)")
     ap.add_argument("--workers", type=int, default=None,
                     help="concurrent engine pool size (default: window)")
     ap.add_argument("--worker-procs", type=int, default=0,
@@ -501,7 +502,8 @@ def main() -> None:
             args.workloads.split(","),
             n_requests=args.requests,
             worker_procs=args.worker_procs,
-            window=max(args.window, 2), backend=args.backend,
+            window=args.window if args.window is not None else 2,
+            backend=args.backend,
             policy=args.policy,
             tenants=args.tenants if args.tenants > 0 else 8,
             model=args.model, model_dir=args.model_dir,
@@ -517,7 +519,8 @@ def main() -> None:
             n_requests=args.requests, backend=args.backend,
             policy=args.policy, slo_ms=args.slo_ms,
             telemetry_path=args.telemetry,
-            cache_path=args.tuning_cache, window=args.window,
+            cache_path=args.tuning_cache,
+            window=args.window if args.window is not None else 1,
             workers=args.workers, tenants=args.tenants,
             model=args.model, model_dir=args.model_dir,
             trace_out=args.trace_out, metrics_out=args.metrics_out,

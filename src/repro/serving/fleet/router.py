@@ -141,7 +141,13 @@ class FleetRouter:
         self.worker_summaries: Dict[str, dict] = {}
         self._ctx = multiprocessing.get_context("spawn")
         self._slots: List[_Slot] = []
+        #: terminal payloads for the *current* run() only — handed back
+        #: and dropped when run() returns, so a long-lived router does
+        #: not accumulate every historical result in memory
         self._results: Dict[str, dict] = {}
+        #: all tokens ever acked (strings only) — survives across runs
+        #: so a late replay from a respawned worker is still suppressed
+        self._seen: set = set()
         self._kill_plan: Optional[tuple] = None  # (slot_idx, after_n)
         self._started = False
         self._closed = False
@@ -238,14 +244,23 @@ class FleetRouter:
             except IndexError:
                 break                 # deadline policy shed the rest
             slot_i = self.shard_for(req.tenant)
+            slot = self._slots[slot_i]
             token = req.trace_id
             order.append(token)
-            self._slots[slot_i].outstanding[token] = req
+            if slot.abandoned:
+                # seat already failed for good — don't route new work
+                # into closed queues; fail it terminally at admission
+                self._on_result(slot, token, self._terminal_failure(slot, req))
+                continue
+            slot.outstanding[token] = req
             batches[slot_i].append((token, req))
         for slot, batch in zip(self._slots, batches):
             self._send_batch(slot, batch)
         self._collect()
-        return [self._results[t] for t in order]
+        out = [self._results[t] for t in order]
+        for t in order:                # scope payloads to this run
+            self._results.pop(t, None)
+        return out
 
     def _send_batch(self, slot: _Slot, batch: List[tuple]) -> None:
         # chunked sends keep delivery pipelined (the worker folds queued
@@ -261,7 +276,8 @@ class FleetRouter:
         while any(s.outstanding for s in self._slots):
             progressed = False
             for slot in self._slots:
-                progressed |= self._drain_slot(slot)
+                if not slot.abandoned:   # abandoned ⇒ queues are closed
+                    progressed |= self._drain_slot(slot)
             self._maybe_fire_kill()
             for slot in self._slots:
                 if slot.outstanding and not slot.proc.is_alive():
@@ -281,8 +297,11 @@ class FleetRouter:
                 msg = slot.result_q.get_nowait()
             except queue_mod.Empty:
                 return progressed
-            except (EOFError, OSError):
-                return progressed     # queue torn down with the worker
+            except (EOFError, OSError, ValueError):
+                # EOFError/OSError: pipe torn down with the worker;
+                # ValueError: the queue itself was close()d (abandoned
+                # slot) — same meaning, nothing more will ever arrive
+                return progressed
             progressed = True
             kind = msg[0]
             if kind == "result":
@@ -302,10 +321,13 @@ class FleetRouter:
     def _on_result(self, slot: _Slot, token: str, payload: dict) -> None:
         # at-least-once delivery: a respawn may replay work whose result
         # the dead worker already flushed — first ack wins, replays drop
-        if token in self._results:
+        # (the token set, not the payload map: payloads are scoped to
+        # one run() but a replay may straggle in much later)
+        if token in self._seen:
             self.stats["duplicate_results"] += 1
             slot.outstanding.pop(token, None)
             return
+        self._seen.add(token)
         slot.outstanding.pop(token, None)
         self._results[token] = payload
         sample = TelemetrySample.from_json(payload["sample"])
@@ -322,9 +344,10 @@ class FleetRouter:
 
     def inject_kill(self, slot_index: int, after_results: int = 1) -> None:
         """Chaos hook for benchmarks/tests: SIGKILL the process in
-        ``slot_index`` once ``after_results`` results have been
-        collected fleet-wide.  Counted on ``stats['injected_kills']`` so
-        harnesses can separate planned kills from real crashes."""
+        ``slot_index`` once ``after_results`` results of the current
+        ``run()`` have been collected fleet-wide.  Counted on
+        ``stats['injected_kills']`` so harnesses can separate planned
+        kills from real crashes."""
         self._kill_plan = (slot_index, after_results)
 
     def _maybe_fire_kill(self) -> None:
@@ -435,7 +458,8 @@ class FleetRouter:
                    and time.monotonic() < deadline):
                 self._drain_slot(slot)
                 time.sleep(0.01)
-            self._drain_slot(slot)
+            if not slot.abandoned:       # abandoned ⇒ queues are closed
+                self._drain_slot(slot)
             slot.proc.join(max(0.1, deadline - time.monotonic()))
             if slot.proc.is_alive():
                 slot.proc.terminate()

@@ -190,3 +190,60 @@ def test_fleet_sigkill_respawns_and_every_request_terminates():
         assert fr.stats["requeued_requests"] >= 1
     assert _fleet_children() == []
     assert fr.summary()["requests"] == len(first) + len(second)
+
+
+def test_fleet_respawn_budget_exhaustion_fails_terminally_and_closes():
+    """max_respawns=0: a SIGKILL'd slot is abandoned instead of
+    respawned and its un-acked work fails terminally with synthetic
+    samples, while the healthy slot keeps serving its own requests.
+    The abandoned slot's queues are close()d, so the remaining collect
+    iterations and close() must tolerate them (the closed-Queue
+    ValueError path) — every admitted request still reaches a terminal
+    status and shutdown leaves no orphans."""
+    reqs = make_trace(["vecadd"], occurrences=8, tenants=8, scale_index=0)
+    with FleetRouter(2, worker=WorkerConfig(model="heuristic"),
+                     max_respawns=0) as fr:
+        victim_i = fr.shard_for("tenant-0")
+        victim = fr._slots[victim_i]
+        os.kill(victim.pid, signal.SIGKILL)
+        victim.proc.join(10)
+        assert not victim.proc.is_alive()
+
+        fr.submit_all(reqs)
+        results = fr.run()
+
+        assert len(results) == len(reqs)
+        failed, served = [], []
+        for r in results:
+            s = TelemetrySample.from_json(r["sample"])
+            if shard_for(s.tenant, 2) == victim_i:
+                failed.append(r)
+                assert r["status"] == "failed"
+                assert "respawn budget" in r["error"]
+                assert s.status == "failed"
+                assert s.worker == f"w{victim_i}"
+            else:
+                served.append(r)
+                assert r["status"] in ("served", "degraded")
+        assert failed and served     # both slots actually had work
+        assert fr.stats["worker_deaths"] == 1
+        assert fr.stats["abandoned_slots"] == 1
+        assert fr.stats["worker_respawns"] == 0
+
+        # new work for an abandoned seat fails at admission, healthy
+        # tenants are unaffected
+        more = make_trace(["vecadd"], occurrences=4, tenants=8,
+                          scale_index=0, seed=1)
+        fr.submit_all(more)
+        again = fr.run()
+        assert len(again) == len(more)
+        for r in again:
+            s = TelemetrySample.from_json(r["sample"])
+            if shard_for(s.tenant, 2) == victim_i:
+                assert r["status"] == "failed"
+            else:
+                assert r["status"] in ("served", "degraded")
+    assert fr.closed
+    fr.close()                                   # idempotent
+    assert _fleet_children() == []
+    assert fr.summary()["requests"] == len(reqs) + len(more)
