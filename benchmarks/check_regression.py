@@ -42,6 +42,17 @@ Works on all the benchmark artifacts:
       gates: ``fleet_worker_crashes`` (unplanned worker deaths) and
       ``fleet_kill_lost_requests`` (requests not terminal after the
       SIGKILL + respawn drill), and ``fleet_kill_terminal_fraction``.
+      ``ipc_overhead_fraction`` (share of router wall not covered by
+      the busiest worker's engine wall — the data-plane tax; lower is
+      better) is gated with an absolute-slack cushion (see ABS_SLACK):
+      it is a small absolute fraction, so a pure relative tolerance
+      would turn measurement noise on a tiny baseline into a red gate.
+      Fleet baselines also arm one STRUCTURAL check: fresh
+      ``throughput_rps["2"]`` must be strictly above
+      ``throughput_rps["1"]`` — adding the second worker process must
+      never make the fleet slower, regardless of what the shared host
+      does to the absolute numbers (both sides of the comparison ride
+      the same box in the same run).
   BENCH_overhead.json (``--serve-real-trace``)  gated on
       ``python_overhead_fraction`` — coordinator decide+retire wall over
       total wall in the real-engine replay (lower is better).  A ratio
@@ -127,6 +138,20 @@ GATED_METRICS = {
         ("higher", "admitted requests reaching a terminal status in the "
                    "SIGKILL drill — the fleet twin of "
                    "chaos_terminal_fraction"),
+    "ipc_overhead_fraction":
+        ("lower", "fleet data-plane tax at max N: router run wall not "
+                  "covered by the busiest worker's engine wall, over "
+                  "run wall — dispatch + pickling + collection cost"),
+}
+
+# metric -> absolute slack added on top of the relative tolerance when
+# computing the bound.  For small absolute fractions (an ipc overhead
+# baseline of e.g. 0.05) a pure relative band is narrower than the
+# run-to-run noise on a shared CI box; the slack keeps the gate about
+# code-level regressions (a reintroduced poll loop, a fat wire format)
+# instead of scheduler jitter
+ABS_SLACK = {
+    "ipc_overhead_fraction": 0.15,
 }
 
 # context printed next to the verdict but never gated (absolute numbers
@@ -160,12 +185,13 @@ def gate(fresh: dict, baseline: dict, tolerance: float,
                              "verdict": "MISSING", "description": desc})
             continue
         got = float(fresh[metric])
+        slack = ABS_SLACK.get(metric, 0.0)
         if direction == "higher":
-            bound = base * (1.0 - tolerance)
+            bound = base * (1.0 - tolerance) - slack
             bad = got < bound
             kind, rel = "floor", "<"
         else:
-            bound = base * (1.0 + tolerance)
+            bound = base * (1.0 + tolerance) + slack
             bad = got > bound
             kind, rel = "ceil", ">"
         verdict = "REGRESSION" if bad else "OK"
@@ -180,6 +206,7 @@ def gate(fresh: dict, baseline: dict, tolerance: float,
                 f"{metric}: {got:.4f} {rel} {bound:.4f} "
                 f"(baseline {base:.4f} {'-' if direction == 'higher' else '+'}"
                 f" {tolerance:.0%})")
+    failures += _structural_checks(fresh, baseline, rows)
     for metric in INFO_METRICS:
         if metric in fresh and metric in baseline \
                 and isinstance(fresh[metric], (int, float)) \
@@ -187,6 +214,37 @@ def gate(fresh: dict, baseline: dict, tolerance: float,
             print(f"  {metric:20s} fresh={float(fresh[metric]):7.3f}  "
                   f"baseline={float(baseline[metric]):7.3f}  (info only)")
     return failures
+
+
+def _structural_checks(fresh: dict, baseline: dict,
+                       rows: list | None = None) -> list[str]:
+    """Same-run shape invariants, armed by the baseline's artifact kind
+    rather than a stored number.  Fleet baselines (those carrying
+    ``fleet_scaling_fraction``) require the fresh run's 2-worker
+    throughput to be STRICTLY above its 1-worker throughput: both sides
+    come from the same box in the same run, so shared-host drift
+    cancels and any ratio <= 1 means the second process bought nothing
+    — a data-plane regression no relative tolerance should forgive."""
+    if baseline.get("fleet_scaling_fraction") is None:
+        return []
+    rps = fresh.get("throughput_rps") or {}
+    if not ({"1", "2"} <= set(rps)):
+        return []                     # single-worker run: nothing to compare
+    ratio = float(rps["2"]) / max(float(rps["1"]), 1e-12)
+    bad = ratio <= 1.0
+    verdict = "REGRESSION" if bad else "OK"
+    print(f"  {'fleet_throughput_1to2':38s} fresh={ratio:9.4f}  "
+          f"baseline={1.0:9.4f}  floor={1.0:9.4f}  {verdict}   "
+          f"(2-worker rps / 1-worker rps, strict; structural)")
+    if rows is not None:
+        rows.append({"metric": "fleet_throughput_1to2", "fresh": ratio,
+                     "baseline": 1.0, "bound": 1.0, "verdict": verdict,
+                     "description": "strict floor (structural)"})
+    if bad:
+        return [f"fleet_throughput_1to2: {ratio:.4f} <= 1.0 (2-worker "
+                f"throughput must be strictly above 1-worker: "
+                f"{float(rps['2']):.1f} vs {float(rps['1']):.1f} rps)"]
+    return []
 
 
 def _fmt(v) -> str:

@@ -362,6 +362,7 @@ def fleet_serve(
     cache_path: Optional[str] = None,
     metrics_out: Optional[str] = None,
     drift_threshold: float = 4.0,
+    wire: str = "auto",
     seed: int = 0,
     verbose: bool = True,
 ) -> dict:
@@ -393,7 +394,7 @@ def fleet_serve(
                        tenants=max(tenants, 1), seed=seed)[:n_requests]
     cfg = WorkerConfig(backend=backend, window=window, model=spec,
                        model_dir=model_dir, drift_threshold=drift_threshold,
-                       cache_path=cache_path)
+                       cache_path=cache_path, wire=wire)
     t0 = time.perf_counter()
     with FleetRouter(worker_procs, worker=cfg, policy=policy,
                      telemetry_path=telemetry_path) as router:
@@ -418,6 +419,13 @@ def fleet_serve(
     summary["window"] = window
     summary["worker_procs"] = worker_procs
     summary["throughput_rps"] = len(results) / max(wall, 1e-12)
+    summary["ipc"] = dict(router.last_run)
+    if verbose and summary.get("ipc_overhead_fraction") is not None:
+        print(f"  ipc overhead: "
+              f"{summary['ipc_overhead_fraction']*100:.1f}% of run wall "
+              f"({summary['result_frames']} result frames, "
+              f"{summary['dispatch_frames']} dispatch frames)",
+              file=sys.stderr)
     if metrics_out:
         from repro.serving.resilience import atomic_write_json
         atomic_write_json(metrics_out, router.metrics_snapshot())
@@ -463,6 +471,12 @@ def main() -> None:
                          "death; implies --adaptive).  Each worker runs "
                          "its own concurrent engine with --window "
                          "requests in flight; 0 = single-process")
+    ap.add_argument("--wire", default="auto",
+                    choices=["auto", "v2", "legacy"],
+                    help="fleet result wire: 'v2' batched frames of "
+                         "positional rows, 'legacy' per-request payload "
+                         "dicts, 'auto' = $REPRO_FLEET_WIRE or v2 "
+                         "(only meaningful with --worker-procs)")
     ap.add_argument("--tenants", type=int, default=0,
                     help="serve N isolated tenants (per-tenant cache "
                          "namespace, drift windows, model fork on "
@@ -509,7 +523,8 @@ def main() -> None:
             model=args.model, model_dir=args.model_dir,
             telemetry_path=args.telemetry,
             cache_path=args.tuning_cache,
-            metrics_out=args.metrics_out)
+            metrics_out=args.metrics_out,
+            wire=args.wire)
         print(json.dumps(summary, indent=2))
         return
 

@@ -26,6 +26,34 @@ from typing import Dict, Iterable, List, Optional
 from repro.serving.telemetry import TelemetryLog, TelemetrySample
 
 
+def payload_from_sample(sample: TelemetrySample) -> dict:
+    """Rehydrate a result payload dict from its telemetry sample — the
+    router-side inverse of the worker's slim wire encoding.
+
+    Wire v2 sends only ``(token, sample_row)`` per result; everything
+    the legacy per-request payload dict carried is derivable from the
+    sample: the request's terminal ``status`` is the sample status with
+    ``"ok"`` mapped back to ``"served"``, and the chosen config is
+    ``(partitions, tasks)`` (``partitions == 0`` means no config was
+    ever picked — a request that failed before decide).  Centralizing
+    the mapping here keeps the payload shape consumed by
+    ``launch/serve.py`` and the fleet tests identical across wire
+    modes."""
+    return {
+        "status": "served" if sample.status == "ok" else sample.status,
+        "error": sample.error,
+        "workload": sample.workload,
+        "tenant": sample.tenant,
+        "config": ([sample.partitions, sample.tasks]
+                   if sample.partitions else None),
+        "measured_s": sample.measured_s,
+        "predicted_s": sample.predicted_s,
+        "cache_hit": sample.cache_hit,
+        "refined": sample.refined,
+        "sample": sample.to_json(),
+    }
+
+
 def _sort_key(s: TelemetrySample):
     retire = s.t_retire_s if s.t_retire_s is not None else math.inf
     return (retire, s.worker or "", s.seq)

@@ -3,30 +3,26 @@
 ``worker_main`` is the spawn target the router launches N of.  Each
 worker builds its own serving stack — model, tuning cache, telemetry
 log, metrics registry, drift detector — so nothing is shared across
-processes except the two ``multiprocessing`` queues: ``task_q`` (router
-→ worker) carries serve batches and control messages, ``result_q``
-(worker → router, one per worker) carries per-request results and the
-lifecycle handshakes.  A dedicated result queue per worker matters for
-crash handling: a SIGKILL mid-``put`` can corrupt a queue's byte
-stream, and with per-worker queues the corruption dies with the worker
-— the router discards the queue on respawn instead of losing the whole
-fleet's result channel.
+processes except two channels: ``task_q`` (router → worker, an mp queue)
+carries serve batches and control messages, and a per-worker result
+:class:`~multiprocessing.connection.Connection` (worker → router, the
+send end of a one-way pipe) carries result frames and the lifecycle
+handshakes.  A dedicated result pipe per worker matters for crash
+handling: a SIGKILL mid-``send`` can truncate a frame mid-byte-stream,
+and with per-worker pipes the corruption dies with the worker — the
+router holds only the read end (it closes its copy of the write end at
+spawn), so a dead worker's truncated frame surfaces as a clean
+``EOFError`` instead of wedging the whole fleet's result channel.
 
-Wire protocol (plain picklable tuples, first element is the kind):
-
-  router → worker
-    ("serve", [(token, WorkloadRequest), ...])   run a batch
-    ("refresh", spec)                            reload model, swap in
-    ("ping",)                                    liveness probe
-    ("stop",)                                    graceful shutdown
-
-  worker → router
-    ("ready", label, pid, model_tag)             startup handshake
-    ("result", label, token, payload)            one terminal request
-    ("refreshed", label, model_tag, error)       refresh ack
-    ("pong", label)
-    ("bye", label, {"summary", "metrics", "stats"})  shutdown handshake
-    ("fatal", label, error)                      dying; router respawns
+The message vocabulary lives in :mod:`repro.serving.fleet.wire`.  The
+return path is *batched*: every engine run's results fold into framed
+``("results", ...)`` messages — the worker-side mirror of
+``_drain_serve``'s request folding — instead of one pickled payload per
+request, with the engine-run boundary as the time window and
+``frame_max`` as the size window.  Result receipt doubles as the
+delivery ack, so acks ride the same frame.  ``wire="legacy"`` (or
+``REPRO_FLEET_WIRE=legacy``) restores the per-request payload-dict
+messages.
 
 ``token`` is the router-assigned ``trace_id`` — the worker's own queue
 preserves it (``RequestQueue.push`` only assigns when unset), so results
@@ -45,7 +41,11 @@ from __future__ import annotations
 import dataclasses
 import os
 import queue as queue_mod
+import time
 from typing import Optional
+
+from repro.serving.fleet.wire import (make_results_frame, resolve_wire_mode,
+                                      split_frames)
 
 
 @dataclasses.dataclass
@@ -80,6 +80,12 @@ class WorkerConfig:
     #: normalization (None = probe, as single-process serving does)
     capacity: Optional[float] = 1.0
     keep_outputs: bool = False
+    #: result wire mode: "auto" (``$REPRO_FLEET_WIRE`` or v2), "v2"
+    #: (framed positional rows), "legacy" (per-request payload dicts)
+    wire: str = "auto"
+    #: size window of result-frame coalescing: one engine run's results
+    #: split into frames of at most this many items
+    frame_max: int = 32
 
     @property
     def label(self) -> str:
@@ -117,9 +123,10 @@ def _build_scheduler(cfg: WorkerConfig):
 
 
 def _light_result(r, label: str) -> dict:
-    """Strip a RequestResult for the wire: the request's numpy payload
-    stays in the worker (the router kept its own copy for requeue), only
-    the decision/outcome/telemetry crosses back."""
+    """Strip a RequestResult for the LEGACY wire: the request's numpy
+    payload stays in the worker (the router kept its own copy for
+    requeue), only the decision/outcome/telemetry crosses back.  Wire v2
+    sends just the sample row instead — see :func:`_send_results`."""
     sample = r.sample
     sample.worker = label
     return {
@@ -152,13 +159,40 @@ def _drain_serve(task_q, batch: list):
             return batch, msg
 
 
-def _serve_batch(sched, label: str, batch, result_q) -> None:
+def _send_results(conn, label: str, results, busy_s: float,
+                  wire: str, frame_max: int) -> None:
+    """Ship one engine run's results back to the router.
+
+    Wire v2 folds them into framed ``("results", ...)`` messages of
+    ``(token, sample_row)`` items — the batched, slim return path — with
+    the run's engine wall time spread across frames pro rata (the router
+    sums busy time per worker, so the attribution split is lossless).
+    Legacy mode sends one ``("result", ...)`` payload dict per request.
+    """
+    if wire == "legacy":
+        for r in results:
+            # token == the router-assigned trace_id, preserved by push()
+            conn.send(("result", label, r.request.trace_id,
+                       _light_result(r, label)))
+        return
+    n = max(1, len(results))
+    for chunk in split_frames(results, frame_max):
+        items = []
+        for r in chunk:
+            sample = r.sample
+            sample.worker = label
+            items.append((r.request.trace_id, sample.to_row()))
+        conn.send(make_results_frame(
+            label, busy_s * (len(chunk) / n), items))
+
+
+def _serve_batch(sched, cfg: WorkerConfig, batch, conn, wire: str) -> None:
     for _token, req in batch:
         sched.submit(req)
-    for r in sched.run():
-        # token == the router-assigned trace_id, preserved by push()
-        result_q.put(("result", label, r.request.trace_id,
-                      _light_result(r, label)))
+    t0 = time.perf_counter()
+    results = sched.run()
+    busy = time.perf_counter() - t0
+    _send_results(conn, cfg.label, results, busy, wire, cfg.frame_max)
 
 
 def _refresh(sched, cfg: WorkerConfig, spec: str):
@@ -169,19 +203,20 @@ def _refresh(sched, cfg: WorkerConfig, spec: str):
     return info["artifact_id"]
 
 
-def worker_main(cfg: WorkerConfig, task_q, result_q) -> None:
+def worker_main(cfg: WorkerConfig, task_q, conn) -> None:
     """Spawn-target serving loop (must live in an importable module —
     spawn re-imports the target by qualified name, so a closure or
     ``__main__`` function would break under pytest and ``-m`` entry
-    points)."""
+    points).  ``conn`` is the send end of this worker's result pipe."""
     os.environ.setdefault("JAX_PLATFORMS", "cpu")
     label = cfg.label
+    wire = resolve_wire_mode(cfg.wire)
     try:
         sched, model_tag = _build_scheduler(cfg)
     except BaseException as e:  # noqa: BLE001 — report, then die loudly
-        result_q.put(("fatal", label, f"{type(e).__name__}: {e}"))
+        conn.send(("fatal", label, f"{type(e).__name__}: {e}"))
         raise SystemExit(1)
-    result_q.put(("ready", label, os.getpid(), model_tag))
+    conn.send(("ready", label, os.getpid(), model_tag))
 
     try:
         pending_ctrl = None
@@ -193,26 +228,26 @@ def worker_main(cfg: WorkerConfig, task_q, result_q) -> None:
                 break
             if kind == "serve":
                 batch, pending_ctrl = _drain_serve(task_q, list(msg[1]))
-                _serve_batch(sched, label, batch, result_q)
+                _serve_batch(sched, cfg, batch, conn, wire)
             elif kind == "refresh":
                 try:
                     tag = _refresh(sched, cfg, msg[1])
-                    result_q.put(("refreshed", label, tag, None))
+                    conn.send(("refreshed", label, tag, None))
                 except Exception as e:  # noqa: BLE001 — keep serving on
                     # a bad publish; the old model stays live
-                    result_q.put(("refreshed", label, None,
-                                  f"{type(e).__name__}: {e}"))
+                    conn.send(("refreshed", label, None,
+                               f"{type(e).__name__}: {e}"))
             elif kind == "ping":
-                result_q.put(("pong", label))
+                conn.send(("pong", label))
     except BaseException as e:  # noqa: BLE001 — anything past the
         # per-request resilience barrier is process-fatal: report, exit
         # nonzero, let the router respawn and requeue un-acked work
-        result_q.put(("fatal", label, f"{type(e).__name__}: {e}"))
+        conn.send(("fatal", label, f"{type(e).__name__}: {e}"))
         raise SystemExit(1)
 
     # graceful goodbye: ship the per-worker aggregates for the fleet
     # merge, then tear down (telemetry close fsyncs the JSONL)
-    result_q.put(("bye", label, {
+    conn.send(("bye", label, {
         "summary": sched.telemetry.summary(),
         "metrics": sched.metrics.snapshot(),
         "stats": dict(sched.stats),
@@ -220,5 +255,4 @@ def worker_main(cfg: WorkerConfig, task_q, result_q) -> None:
     if cfg.cache_path:
         sched.cache.save()
     sched.close()
-    result_q.close()
-    result_q.join_thread()
+    conn.close()

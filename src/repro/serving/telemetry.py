@@ -96,6 +96,38 @@ class TelemetrySample:
         fields = {f.name for f in dataclasses.fields(TelemetrySample)}
         return TelemetrySample(**{k: v for k, v in d.items() if k in fields})
 
+    # -- compact positional codec (the fleet wire's slim payload) ----------
+
+    def to_row(self) -> tuple:
+        """Positional encoding in :data:`WIRE_FIELDS` order — the fleet
+        wire's slim payload: no key strings cross the process boundary,
+        only values.  The schema is the explicit field tuple below plus
+        ``repro.serving.fleet.wire.WIRE_VERSION``."""
+        return tuple(getattr(self, f) for f in WIRE_FIELDS)
+
+    @staticmethod
+    def from_row(row) -> "TelemetrySample":
+        """Inverse of :meth:`to_row`.  A shorter row (an older writer
+        that predates trailing fields) rehydrates with dataclass
+        defaults for the missing tail — WIRE_FIELDS is append-only."""
+        return TelemetrySample(**dict(zip(WIRE_FIELDS, row)))
+
+
+#: Explicit positional schema of :meth:`TelemetrySample.to_row`.
+#: APPEND-ONLY: new dataclass fields go at the END of this tuple and
+#: bump ``repro.serving.fleet.wire.WIRE_VERSION`` — reordering or
+#: removing entries breaks row decoding silently, which is exactly what
+#: the wire version guard exists to prevent.  A tier-1 test asserts this
+#: tuple stays in sync with the dataclass fields.
+WIRE_FIELDS = (
+    "seq", "tenant", "workload", "key", "backend", "partitions", "tasks",
+    "cache_hit", "predicted_s", "measured_s", "rel_error", "refined",
+    "source", "status", "error", "degraded_via", "inflight", "load_factor",
+    "measured_norm_s", "t_enqueue_s", "t_decide_s", "t_dispatch_s",
+    "t_retire_s", "latency_s", "deadline_s", "slo_violation", "queue_depth",
+    "trace_id", "worker",
+)
+
 
 class EmptyWindowError(ValueError):
     """A statistic was requested over zero samples.
